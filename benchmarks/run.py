@@ -1,0 +1,35 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints ``name,us_per_call,derived``
+CSV rows for:
+  * fig4b_collectives      — ALLREDUCE runtime vs buffer size (paper Fig 4b)
+  * fig4a_training         — BERT training throughput LUMORPH vs Ring (Fig 4a)
+  * fig2a_fragmentation    — multi-tenant acceptance/utilization (Fig 2a)
+  * bench_kernels          — Pallas kernels vs oracles
+  * bench_collective_exec  — executable shard_map collectives (8 fake devices)
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_collective_exec, bench_kernels,
+                            fig2a_fragmentation, fig4a_training,
+                            fig4b_collectives)
+    modules = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
+               bench_kernels, bench_collective_exec]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    header_printed = False
+    for m in modules:
+        name = m.__name__.split(".")[-1]
+        if only and only != name:
+            continue
+        lines = m.run()
+        start = 0 if not header_printed else 1  # one CSV header total
+        for line in lines[start:]:
+            print(line, flush=True)
+        header_printed = True
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving: prefill a prompt batch, decode with KV caches.
+
+Exercises the serve-side substrate across three cache families:
+  * h2o-danube  — GQA + sliding-window ring-buffer cache,
+  * deepseek-v2-lite — MLA compressed latent cache (576 B/token vs 4 KB),
+  * zamba2      — mamba2 state + weight-shared attention caches (hybrid).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ("h2o-danube-1.8b", "deepseek-v2-lite-16b", "zamba2-1.2b"):
+        print(f"\n=== {arch} (smoke config) ===")
+        serve_main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "12", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""LUMORPH: chip-to-chip photonic connectivity for multi-accelerator ML
+servers (CS.NI 2025), reproduced as a production JAX framework.
+
+Subpackages: core (the paper), models, configs, sharding, optim, data,
+checkpoint, runtime, kernels (Pallas TPU), launch.
+"""

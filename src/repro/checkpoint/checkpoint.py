@@ -1,0 +1,116 @@
+"""Fault-tolerant sharded checkpointing (no orbax in this environment).
+
+Design (multi-host ready, 1000+ nodes):
+
+  * **atomic**: writes go to ``step_<n>.tmp/`` then ``rename()`` to
+    ``step_<n>/`` — a crash mid-write never corrupts the latest checkpoint;
+  * **sharded**: each leaf is saved as its own ``.npy`` inside the step dir
+    with a JSON manifest (pytree structure, dtypes, shapes, step).  On a
+    real multi-host pod each host writes only the shards it owns (the
+    process-local addressable slice); here (single host) we write full
+    arrays — the manifest format is host-count independent;
+  * **elastic restore**: ``restore()`` takes the *target* sharding policy
+    and device_put's every leaf into it, so a checkpoint written on a
+    512-chip mesh restarts on 256 chips (or any other mesh) unchanged —
+    combined with the LUMORPH allocator this is the paper's
+    fragmentation-free recovery story (DESIGN.md §7);
+  * **retention**: ``keep`` most recent steps are retained, older ones
+    garbage-collected after a successful write.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, state: PyTree, keep: int = 3) -> Path:
+    """Atomically write ``state`` (any pytree of arrays) for ``step``."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"step_{step:010d}.tmp"
+    final = ckpt_dir / f"step_{step:010d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(_flatten_with_paths(state)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({"key": key, "file": fname,
+                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    (tmp / MANIFEST).write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for d in ckpt_dir.iterdir():
+        if d.is_dir() and d.name.startswith("step_") and not d.name.endswith(".tmp"):
+            if (d / MANIFEST).exists():  # only complete checkpoints count
+                steps.append(int(d.name[5:]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, like: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like``; reshard onto ``shardings``
+    (elastic: the target mesh may differ from the writer's)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:010d}"
+    manifest = json.loads((d / MANIFEST).read_text())
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = [k for k, _ in _flatten_with_paths(like)]
+    sh_flat = jax.tree.leaves(shardings) if shardings is not None else [None] * len(keys)
+    out = []
+    for key, leaf, sh in zip(keys, flat_like, sh_flat):
+        m = by_key.get(key)
+        if m is None:
+            raise KeyError(f"checkpoint {d} missing leaf {key!r}")
+        arr = np.load(d / m["file"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != target {leaf.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+def _gc(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(
+        int(d.name[5:]) for d in ckpt_dir.iterdir()
+        if d.is_dir() and d.name.startswith("step_") and not d.name.endswith(".tmp"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:010d}", ignore_errors=True)

@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` → ModelConfig."""
+
+from __future__ import annotations
+
+from repro.configs import (bert_large, codeqwen1_5_7b, dbrx_132b,
+                           deepseek_v2_lite_16b, glm4_9b, h2o_danube_1_8b,
+                           paligemma_3b, phi3_medium_14b, whisper_tiny,
+                           xlstm_125m, zamba2_1_2b)
+from repro.configs.base import ModelConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeSpec, cells_for, supports_long_context  # noqa: F401
+
+_MODULES = [
+    h2o_danube_1_8b, phi3_medium_14b, codeqwen1_5_7b, glm4_9b, dbrx_132b,
+    deepseek_v2_lite_16b, xlstm_125m, whisper_tiny, zamba2_1_2b, paligemma_3b,
+    bert_large,
+]
+
+REGISTRY: dict[str, object] = {m.ARCH_ID: m for m in _MODULES}
+
+#: the ten assigned architectures (bert-large is the paper's own extra)
+ASSIGNED: tuple[str, ...] = tuple(m.ARCH_ID for m in _MODULES[:10])
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch_id].config()
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}")
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch_id].smoke_config()
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}")

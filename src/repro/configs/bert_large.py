@@ -1,0 +1,34 @@
+"""bert-large — the paper's own end-to-end evaluation model (Fig 4a).
+
+24L d_model=1024 16H d_ff=4096 vocab=30522 (~340M params).
+
+Used by ``benchmarks/fig4a_training.py`` and the LUMORPH training example:
+its data-parallel gradient buckets are exactly the "many small AllReduce
+buffers" whose α-dominated cost the paper's Fig 4a argument rests on.
+(We train it as a causal LM; the communication trace — per-bucket gradient
+bytes — is identical to the MLM objective's.)
+"""
+
+from repro.configs.base import ModelConfig
+
+ARCH_ID = "bert-large"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab_size=30522,
+        use_rope=False, norm="layernorm", mlp_style="gelu",
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab_size=256,
+        use_rope=False, norm="layernorm", mlp_style="gelu",
+        tie_embeddings=True,
+    )

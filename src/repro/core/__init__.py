@@ -1,0 +1,20 @@
+"""LUMORPH core: the paper's contribution as a composable JAX library.
+
+  * ``cost_model``   -- alpha-beta pricing of collectives incl. MZI reconfiguration
+  * ``fabric``       -- LIGHTPATH photonic fabric + LUMORPH rack resource model
+  * ``scheduler``    -- collective -> per-round circuit schedules (validated)
+  * ``allocator``    -- fragmentation-free multi-tenant allocation + baselines
+  * ``sipac``        -- SiPAC(r, l) emulation (paper Fig 3)
+  * ``collectives``  -- executable shard_map ALLREDUCE (ring / LUMORPH-2 / -4)
+"""
+
+from repro.core import allocator, collectives, cost_model, fabric, scheduler, sipac  # noqa: F401
+from repro.core.collectives import all_reduce, make_all_reduce  # noqa: F401
+from repro.core.cost_model import (  # noqa: F401
+    IDEAL_SWITCH,
+    LUMORPH_LINK,
+    TPU_LINK,
+    LinkModel,
+    algorithm_cost,
+    select_algorithm,
+)

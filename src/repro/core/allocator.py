@@ -1,0 +1,221 @@
+"""Multi-tenant compute allocation on a rack (paper §3, Fig 2a).
+
+Compares three allocation disciplines over the same physical rack:
+
+  * **LUMORPH** — any free subset of chips can serve any tenant, because the
+    photonic fabric establishes direct circuits between arbitrary chips.
+    Placement is a pure packing heuristic (densest-server-first) to conserve
+    inter-server fibers; it can never *reject* a request that fits in the
+    free count.  This is the paper's fragmentation-free property.
+  * **Torus slices** (TPUv4-style) — chips form a 3D torus; a tenant gets an
+    axis-aligned sub-box.  Requests that are not expressible as a free
+    sub-box are rejected even when enough chips are free → fragmentation.
+  * **SiPAC blocks** — chips are statically grouped into BCube-style groups
+    of size r^ℓ; tenants get aligned power-of-r subgroups.
+
+The elastic runtime (``repro.runtime``) re-allocates a tenant through the
+same interface after chip failures: with LUMORPH, surviving free chips are
+always usable, so recovery never strands capacity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass
+class Allocation:
+    tenant: str
+    chips: tuple[int, ...]
+    requested: int
+
+    @property
+    def overallocated(self) -> int:
+        return len(self.chips) - self.requested
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class BaseAllocator:
+    """Common free-set bookkeeping."""
+
+    def __init__(self, n_chips: int):
+        self.n_chips = n_chips
+        self.free: set[int] = set(range(n_chips))
+        self.allocations: dict[str, Allocation] = {}
+
+    # -- interface -----------------------------------------------------------
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        raise NotImplementedError
+
+    def release(self, tenant: str) -> None:
+        a = self.allocations.pop(tenant)
+        self.free.update(a.chips)
+
+    def fail_chips(self, chips: Sequence[int]) -> list[str]:
+        """Mark chips dead; return tenants that lost capacity."""
+        dead = set(chips)
+        self.free -= dead
+        hit = []
+        for t, a in list(self.allocations.items()):
+            if dead & set(a.chips):
+                hit.append(t)
+                # surviving chips return to the free pool; tenant must re-allocate
+                self.free.update(set(a.chips) - dead)
+                del self.allocations[t]
+        return hit
+
+    @property
+    def utilization(self) -> float:
+        used = sum(len(a.chips) for a in self.allocations.values())
+        return used / self.n_chips if self.n_chips else 0.0
+
+    def _commit(self, tenant: str, chips: Sequence[int], requested: int) -> Allocation:
+        chips = tuple(sorted(chips))
+        assert set(chips) <= self.free, "allocator bug: chips not free"
+        self.free -= set(chips)
+        a = Allocation(tenant, chips, requested)
+        self.allocations[tenant] = a
+        return a
+
+
+class LumorphAllocator(BaseAllocator):
+    """Fragmentation-free: any ``k`` free chips form a valid slice."""
+
+    def __init__(self, n_chips: int, tiles_per_server: int = 8):
+        super().__init__(n_chips)
+        self.tiles_per_server = tiles_per_server
+
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        if k <= 0:
+            raise ValueError("k must be positive")
+        if k > len(self.free):
+            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
+        # densest-server-first packing: minimizes the number of servers a
+        # tenant spans, conserving the rack's inter-server fiber budget.
+        by_server: dict[int, list[int]] = {}
+        for c in self.free:
+            by_server.setdefault(c // self.tiles_per_server, []).append(c)
+        order = sorted(by_server.values(), key=len, reverse=True)
+        picked: list[int] = []
+        for server_chips in order:
+            take = min(k - len(picked), len(server_chips))
+            picked.extend(sorted(server_chips)[:take])
+            if len(picked) == k:
+                break
+        return self._commit(tenant, picked, k)
+
+
+class TorusAllocator(BaseAllocator):
+    """TPUv4-style: tenants get axis-aligned sub-boxes of a 3D torus."""
+
+    def __init__(self, dims: tuple[int, int, int]):
+        super().__init__(dims[0] * dims[1] * dims[2])
+        self.dims = dims
+
+    def _chip(self, x: int, y: int, z: int) -> int:
+        X, Y, Z = self.dims
+        return (x % X) * Y * Z + (y % Y) * Z + (z % Z)
+
+    def _boxes(self, k: int):
+        """Box shapes with volume ≥ k (smallest volume first, pow-2 dims)."""
+        X, Y, Z = self.dims
+        pows = lambda n: [d for d in (1, 2, 4, 8, 16, 32) if d <= n]
+        shapes = {(a, b, c) for a in pows(X) for b in pows(Y) for c in pows(Z)
+                  if a * b * c >= k}
+        return sorted(shapes, key=lambda s: (s[0] * s[1] * s[2], s))
+
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        if k > len(self.free):
+            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} free")
+        X, Y, Z = self.dims
+        for (a, b, c) in self._boxes(k):
+            for ox, oy, oz in itertools.product(range(X), range(Y), range(Z)):
+                # aligned placements only (slice origins on multiples of shape)
+                if ox % a or oy % b or oz % c:
+                    continue
+                chips = [self._chip(ox + i, oy + j, oz + l)
+                         for i in range(a) for j in range(b) for l in range(c)]
+                if set(chips) <= self.free:
+                    return self._commit(tenant, chips, k)
+        raise AllocationError(
+            f"{tenant}: no free {k}-chip torus slice (fragmentation: "
+            f"{len(self.free)} chips free)")
+
+
+class SipacAllocator(BaseAllocator):
+    """SiPAC(r,ℓ)-style: rack pre-partitioned into BCube groups of r^ℓ chips;
+    tenants get aligned power-of-r subgroups."""
+
+    def __init__(self, n_chips: int, r: int = 2, ell: int = 3):
+        super().__init__(n_chips)
+        self.r, self.ell = r, ell
+        self.group = r ** ell
+        if n_chips % self.group:
+            raise ValueError(f"n_chips {n_chips} not a multiple of group {self.group}")
+
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        if k > len(self.free):
+            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} free")
+        # round up to the nearest power of r, capped at the group size
+        size = 1
+        while size < min(k, self.group):
+            size *= self.r
+        if k > self.group:
+            # multi-group tenants take whole groups
+            n_groups = math.ceil(k / self.group)
+            got = []
+            for g in range(self.n_chips // self.group):
+                chips = range(g * self.group, (g + 1) * self.group)
+                if set(chips) <= self.free:
+                    got.append(list(chips))
+                if len(got) == n_groups:
+                    return self._commit(tenant, [c for grp in got for c in grp], k)
+            raise AllocationError(f"{tenant}: need {n_groups} whole groups")
+        for g in range(self.n_chips // self.group):
+            base = g * self.group
+            for off in range(0, self.group, size):
+                chips = range(base + off, base + off + size)
+                if set(chips) <= self.free:
+                    return self._commit(tenant, list(chips), k)
+        raise AllocationError(
+            f"{tenant}: no aligned {size}-chip subgroup free (fragmentation)")
+
+
+def make_allocator(kind: str, n_chips: int, **kw) -> BaseAllocator:
+    if kind == "lumorph":
+        return LumorphAllocator(n_chips, **kw)
+    if kind == "torus":
+        side = round(n_chips ** (1 / 3))
+        dims = kw.pop("dims", None)
+        if dims is None:
+            # factor n_chips into 3 near-equal pow-2-friendly dims
+            dims = _default_dims(n_chips)
+        return TorusAllocator(dims)
+    if kind == "sipac":
+        return SipacAllocator(n_chips, **kw)
+    raise ValueError(f"unknown allocator kind {kind!r}")
+
+
+def _default_dims(n: int) -> tuple[int, int, int]:
+    best = None
+    for a in range(1, n + 1):
+        if n % a:
+            continue
+        for b in range(a, n // a + 1):
+            if (n // a) % b:
+                continue
+            c = n // a // b
+            if c < b:
+                continue
+            cand = (a, b, c)
+            score = c - a  # prefer near-cubic
+            if best is None or score < best[0]:
+                best = (score, cand)
+    assert best is not None
+    return best[1]

@@ -1,0 +1,241 @@
+"""LIGHTPATH: a server-scale switchable photonic fabric (paper §2).
+
+Software model of the hardware prototype:
+
+  * a LIGHTPATH wafer carries up to 32 **tiles**; a compute chip (GPU/TPU)
+    is 3D-stacked on each tile;
+  * every tile has a number of **TRX banks** (transmitter = MRR modulators,
+    receiver = demux + Ge photodetectors + SerDes) — each bank terminates
+    one optical circuit at a time;
+  * a tile drives up to 16 **wavelength-multiplexed lasers**; a circuit
+    occupies one wavelength on the waveguide path it traverses;
+  * **MZI 1×3 switches** program the waveguide network; reprogramming takes
+    3.7 µs (measured).  Establishing a circuit between any two tiles =
+    configuring MZIs so a pair of bus waveguides connects TRX(A) → TRX(B).
+
+The model enforces the resource limits (TRX banks per tile, wavelengths per
+waveguide segment) and accounts reconfigurations so the scheduler/cost-model
+can price collectives.  Waveguide routing uses the dense tile-to-tile
+waveguide mesh the paper describes ("thousands of waveguides between
+tiles"), so any free TRX pair can be connected — the fabric is
+*non-blocking at the TRX level*; contention only arises at TRX banks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Optional
+
+from repro.core.cost_model import MZI_RECONFIG_DELAY
+
+#: Paper §2 hardware limits.
+MAX_TILES_PER_WAFER = 32
+WAVELENGTHS_PER_TILE = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class Circuit:
+    """A live optical circuit between two tiles (directed: src transmits)."""
+
+    src: int  # global chip id
+    dst: int
+    wavelength: int
+    circuit_id: int
+    via_fiber: Optional[int] = None  # fiber index when crossing servers
+
+
+class CircuitError(RuntimeError):
+    """Raised when a circuit cannot be established (resource exhausted)."""
+
+
+class LightpathFabric:
+    """One LIGHTPATH wafer: ``n_tiles`` tiles inside a single server."""
+
+    def __init__(self, n_tiles: int = 8, trx_banks_per_tile: int = 4,
+                 wavelengths_per_tile: int = WAVELENGTHS_PER_TILE):
+        if n_tiles > MAX_TILES_PER_WAFER:
+            raise ValueError(
+                f"a LIGHTPATH wafer has ≤ {MAX_TILES_PER_WAFER} tiles, got {n_tiles}")
+        self.n_tiles = n_tiles
+        self.trx_banks_per_tile = trx_banks_per_tile
+        self.wavelengths_per_tile = wavelengths_per_tile
+        # per-tile occupancy
+        self._tx_in_use = [0] * n_tiles
+        self._rx_in_use = [0] * n_tiles
+        self._lambda_in_use: list[set[int]] = [set() for _ in range(n_tiles)]
+
+    # -- resource accounting -------------------------------------------------
+    def tx_free(self, tile: int) -> int:
+        return self.trx_banks_per_tile - self._tx_in_use[tile]
+
+    def rx_free(self, tile: int) -> int:
+        return self.trx_banks_per_tile - self._rx_in_use[tile]
+
+    def alloc_endpoint(self, src_tile: int, dst_tile: Optional[int]) -> int:
+        """Reserve a TX bank on ``src_tile`` (and RX on ``dst_tile`` if local).
+
+        Returns the wavelength assigned to the new circuit.  ``dst_tile`` is
+        None when the circuit exits the server over a fiber (RX is on the
+        remote wafer).
+        """
+        if self.tx_free(src_tile) <= 0:
+            raise CircuitError(f"tile {src_tile}: no free TX bank")
+        if dst_tile is not None and self.rx_free(dst_tile) <= 0:
+            raise CircuitError(f"tile {dst_tile}: no free RX bank")
+        free_lambda = set(range(self.wavelengths_per_tile)) - self._lambda_in_use[src_tile]
+        if not free_lambda:
+            raise CircuitError(f"tile {src_tile}: all {self.wavelengths_per_tile} wavelengths lit")
+        wl = min(free_lambda)
+        self._tx_in_use[src_tile] += 1
+        self._lambda_in_use[src_tile].add(wl)
+        if dst_tile is not None:
+            self._rx_in_use[dst_tile] += 1
+        return wl
+
+    def alloc_rx_only(self, dst_tile: int) -> None:
+        """Reserve an RX bank for a circuit arriving over a fiber."""
+        if self.rx_free(dst_tile) <= 0:
+            raise CircuitError(f"tile {dst_tile}: no free RX bank")
+        self._rx_in_use[dst_tile] += 1
+
+    def release_endpoint(self, src_tile: Optional[int], dst_tile: Optional[int],
+                         wavelength: Optional[int]) -> None:
+        if src_tile is not None:
+            self._tx_in_use[src_tile] -= 1
+            if wavelength is not None:
+                self._lambda_in_use[src_tile].discard(wavelength)
+        if dst_tile is not None:
+            self._rx_in_use[dst_tile] -= 1
+
+    def reset(self) -> None:
+        self._tx_in_use = [0] * self.n_tiles
+        self._rx_in_use = [0] * self.n_tiles
+        self._lambda_in_use = [set() for _ in range(self.n_tiles)]
+
+
+class LumorphRack:
+    """LUMORPH: ``n_servers`` LIGHTPATH servers cascaded with direct fibers.
+
+    Chips are numbered globally: chip ``g`` lives on server ``g // tiles``
+    tile ``g % tiles``.  Inter-server circuits consume one fiber from the
+    rack-level fiber pool (paper: "given enough fibers between servers,
+    LUMORPH provides arbitrary sized circuit-switched allocations").
+    """
+
+    def __init__(self, n_servers: int = 32, tiles_per_server: int = 8,
+                 trx_banks_per_tile: int = 4, fibers_per_server_pair: int = 8):
+        self.n_servers = n_servers
+        self.tiles_per_server = tiles_per_server
+        self.servers = [LightpathFabric(tiles_per_server, trx_banks_per_tile)
+                        for _ in range(n_servers)]
+        self.fibers_per_server_pair = fibers_per_server_pair
+        self._fibers_in_use: dict[tuple[int, int], int] = {}
+        self._circuits: dict[int, Circuit] = {}
+        self._next_circuit_id = 0
+        #: total reconfiguration events (each batch of changes = one MZI
+        #: reprogramming window of MZI_RECONFIG_DELAY)
+        self.reconfig_events = 0
+        self.reconfig_time = 0.0
+
+    # -- addressing ----------------------------------------------------------
+    @property
+    def n_chips(self) -> int:
+        return self.n_servers * self.tiles_per_server
+
+    def server_of(self, chip: int) -> int:
+        return chip // self.tiles_per_server
+
+    def tile_of(self, chip: int) -> int:
+        return chip % self.tiles_per_server
+
+    # -- circuits ------------------------------------------------------------
+    def establish(self, src: int, dst: int) -> Circuit:
+        """Program MZIs to build a directed circuit src → dst."""
+        if src == dst:
+            raise CircuitError("loopback circuits are not needed (intra-chip)")
+        s_srv, d_srv = self.server_of(src), self.server_of(dst)
+        s_tile, d_tile = self.tile_of(src), self.tile_of(dst)
+        fiber = None
+        if s_srv == d_srv:
+            wl = self.servers[s_srv].alloc_endpoint(s_tile, d_tile)
+        else:
+            key = (min(s_srv, d_srv), max(s_srv, d_srv))
+            used = self._fibers_in_use.get(key, 0)
+            if used >= self.fibers_per_server_pair:
+                raise CircuitError(f"no free fiber between servers {key}")
+            wl = self.servers[s_srv].alloc_endpoint(s_tile, None)
+            try:
+                self.servers[d_srv].alloc_rx_only(d_tile)
+            except CircuitError:
+                self.servers[s_srv].release_endpoint(s_tile, None, wl)
+                raise
+            self._fibers_in_use[key] = used + 1
+            fiber = used
+        c = Circuit(src=src, dst=dst, wavelength=wl,
+                    circuit_id=self._next_circuit_id, via_fiber=fiber)
+        self._next_circuit_id += 1
+        self._circuits[c.circuit_id] = c
+        return c
+
+    def teardown(self, circuit: Circuit) -> None:
+        if circuit.circuit_id not in self._circuits:
+            raise CircuitError(f"circuit {circuit.circuit_id} is not live")
+        del self._circuits[circuit.circuit_id]
+        s_srv, d_srv = self.server_of(circuit.src), self.server_of(circuit.dst)
+        s_tile, d_tile = self.tile_of(circuit.src), self.tile_of(circuit.dst)
+        if s_srv == d_srv:
+            self.servers[s_srv].release_endpoint(s_tile, d_tile, circuit.wavelength)
+        else:
+            self.servers[s_srv].release_endpoint(s_tile, None, circuit.wavelength)
+            self.servers[d_srv].release_endpoint(None, d_tile, None)
+            key = (min(s_srv, d_srv), max(s_srv, d_srv))
+            self._fibers_in_use[key] -= 1
+
+    def reconfigure(self, new_pairs: Iterable[tuple[int, int]]) -> list[Circuit]:
+        """Atomically replace all live circuits with ``new_pairs``.
+
+        One reconfiguration window: all MZIs are reprogrammed together, so
+        the whole swap costs a single MZI_RECONFIG_DELAY (paper §2: switches
+        are programmed in parallel).  Returns the new circuits.
+        """
+        for c in list(self._circuits.values()):
+            self.teardown(c)
+        new = [self.establish(s, d) for s, d in new_pairs]
+        self.reconfig_events += 1
+        self.reconfig_time += MZI_RECONFIG_DELAY
+        return new
+
+    def live_circuits(self) -> list[Circuit]:
+        return list(self._circuits.values())
+
+    def validate_round(self, pairs: list[tuple[int, int]]) -> None:
+        """Check a round of simultaneous transfers is realizable (dry check).
+
+        Degree limits: per-chip TX/RX count ≤ TRX banks; wavelength budget;
+        fiber budget per server pair.  Raises CircuitError with a diagnosis.
+        """
+        tx = {}
+        rx = {}
+        fibers: dict[tuple[int, int], int] = {}
+        for s, d in pairs:
+            tx[s] = tx.get(s, 0) + 1
+            rx[d] = rx.get(d, 0) + 1
+            s_srv, d_srv = self.server_of(s), self.server_of(d)
+            if s_srv != d_srv:
+                key = (min(s_srv, d_srv), max(s_srv, d_srv))
+                fibers[key] = fibers.get(key, 0) + 1
+        banks = self.servers[0].trx_banks_per_tile
+        wls = self.servers[0].wavelengths_per_tile
+        for chip, n in tx.items():
+            if n > banks:
+                raise CircuitError(f"chip {chip} needs {n} TX circuits > {banks} TRX banks")
+            if n > wls:
+                raise CircuitError(f"chip {chip} needs {n} wavelengths > {wls}")
+        for chip, n in rx.items():
+            if n > banks:
+                raise CircuitError(f"chip {chip} needs {n} RX circuits > {banks} TRX banks")
+        for key, n in fibers.items():
+            if n > self.fibers_per_server_pair:
+                raise CircuitError(
+                    f"servers {key} need {n} fibers > {self.fibers_per_server_pair}")

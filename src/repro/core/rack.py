@@ -1,0 +1,21 @@
+"""Convenience re-export: the LUMORPH rack lives in ``repro.core.fabric``.
+
+Kept as its own module path because launch scripts and the elastic runtime
+refer to rack-level concepts (servers, fibers) independently of the
+wafer-level LIGHTPATH model.
+"""
+
+from repro.core.fabric import Circuit, CircuitError, LightpathFabric, LumorphRack  # noqa: F401
+
+
+def default_rack(n_chips: int = 256, tiles_per_server: int = 8,
+                 trx_banks_per_tile: int = 4,
+                 fibers_per_server_pair: int = 8) -> LumorphRack:
+    """The paper's evaluation rack: 256 GPUs = 32 servers × 8 tiles."""
+    assert n_chips % tiles_per_server == 0
+    return LumorphRack(
+        n_servers=n_chips // tiles_per_server,
+        tiles_per_server=tiles_per_server,
+        trx_banks_per_tile=trx_banks_per_tile,
+        fibers_per_server_pair=fibers_per_server_pair,
+    )

@@ -1,0 +1,209 @@
+"""Circuit schedules for collectives on LUMORPH (paper §4).
+
+Turns an (algorithm, participant set) pair into an explicit per-round list
+of directed transfers, validates every round against the rack's photonic
+resource limits (TRX banks, wavelengths, fibers), counts reconfiguration
+windows, and prices the whole schedule with the α–β model.
+
+The same partner maps drive the *executable* shard_map collectives in
+``repro.core.collectives`` — a round's ``pairs`` list is exactly the
+``perm`` argument of ``jax.lax.ppermute``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.cost_model import LinkModel, mixed_radix_factorization
+from repro.core.fabric import LumorphRack
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """One communication round: simultaneous directed transfers."""
+
+    pairs: tuple[tuple[int, int], ...]  # (src_chip, dst_chip)
+    bytes_per_circuit: float  # payload each circuit carries this round
+    #: circuits sharing one chip's egress this round (bandwidth divisor)
+    egress_fanout: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    algo: str
+    participants: tuple[int, ...]
+    rounds: tuple[Round, ...]
+    n_bytes: float  # full ALLREDUCE buffer size
+
+    def reconfigurations(self) -> int:
+        """Rounds whose circuit set differs from the previous round's."""
+        count = 0
+        prev: frozenset = frozenset()
+        for r in self.rounds:
+            cur = frozenset(r.pairs)
+            if cur != prev:
+                count += 1
+            prev = cur
+        return count
+
+    def cost(self, link: LinkModel) -> float:
+        """Total α–β time: per round, α (+ reconfig if circuits changed) +
+        serialized egress bytes × β."""
+        total = 0.0
+        prev: frozenset = frozenset()
+        for r in self.rounds:
+            cur = frozenset(r.pairs)
+            reconf = cur != prev
+            total += link.round_alpha(reconf)
+            total += r.bytes_per_circuit * r.egress_fanout * link.beta
+            prev = cur
+        return total
+
+    def validate(self, rack: LumorphRack) -> None:
+        for i, r in enumerate(self.rounds):
+            try:
+                rack.validate_round(list(r.pairs))
+            except Exception as e:  # re-raise with round context
+                raise type(e)(f"round {i}: {e}") from e
+
+
+# ---------------------------------------------------------------------------
+# Schedule builders
+# ---------------------------------------------------------------------------
+
+def ring_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
+    """Ring ALLREDUCE: 2(p−1) rounds, each chip ships n/p to its successor."""
+    p = len(chips)
+    rounds = []
+    if p > 1:
+        ring_pairs = tuple((chips[i], chips[(i + 1) % p]) for i in range(p))
+        chunk = n_bytes / p
+        for _ in range(2 * (p - 1)):
+            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk))
+    return Schedule("ring", tuple(chips), tuple(rounds), n_bytes)
+
+
+def rhd_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
+    """LUMORPH-2: recursive halving reduce-scatter + doubling all-gather."""
+    p = len(chips)
+    if p & (p - 1):
+        return ring_schedule(chips, n_bytes)  # paper §3 fallback
+    rounds: list[Round] = []
+    steps = int(math.log2(p)) if p > 1 else 0
+    # halving: partner distance p/2, p/4, ..., 1; chunk n/2, n/4, ...
+    chunk = n_bytes / 2
+    dist = p // 2
+    for _ in range(steps):
+        pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk))
+        chunk /= 2
+        dist //= 2
+    # doubling: distance 1, 2, ..., p/2; chunk n/p, 2n/p, ...
+    chunk = n_bytes / p
+    dist = 1
+    for _ in range(steps):
+        pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk))
+        chunk *= 2
+        dist *= 2
+    return Schedule("lumorph2", tuple(chips), tuple(rounds), n_bytes)
+
+
+def rqq_schedule(chips: Sequence[int], n_bytes: float, radix: int = 4) -> Schedule:
+    """LUMORPH-4: radix-r quartering/quadrupling with (r−1) circuits/chip/round.
+
+    Mixed-radix generalization handles any p that factors into ≤radix terms.
+    Digit groups follow the mixed-radix factorization of p; in a radix-r
+    round every chip exchanges distinct sub-chunks with the r−1 other chips
+    in its digit group (egress bandwidth split r−1 ways).
+    """
+    p = len(chips)
+    radices = mixed_radix_factorization(p, radix) if p > 1 else []
+    rounds: list[Round] = []
+    group = 1  # how many ways the buffer is already scattered
+    strides: list[tuple[int, int]] = []  # (radix, stride) per phase for mirroring
+    stride = 1
+    for r in radices:
+        # chips whose index differs only in this digit form a group
+        pairs = []
+        for i in range(p):
+            digit = (i // stride) % r
+            for off in range(1, r):
+                j = i + ((digit + off) % r - digit) * stride
+                pairs.append((chips[i], chips[j]))
+        chunk = n_bytes / group  # bytes currently owned by each chip
+        rounds.append(Round(pairs=tuple(pairs),
+                            bytes_per_circuit=chunk / r,
+                            egress_fanout=r - 1))
+        strides.append((r, stride))
+        stride *= r
+        group *= r
+    # all-gather mirrors the reduce-scatter phases in reverse
+    for r, st in reversed(strides):
+        group //= r
+        chunk = n_bytes / group
+        pairs = []
+        for i in range(p):
+            digit = (i // st) % r
+            for off in range(1, r):
+                j = i + ((digit + off) % r - digit) * st
+                pairs.append((chips[i], chips[j]))
+        rounds.append(Round(pairs=tuple(pairs),
+                            bytes_per_circuit=chunk / r,
+                            egress_fanout=r - 1))
+    return Schedule(f"lumorph{radix}", tuple(chips), tuple(rounds), n_bytes)
+
+
+SCHEDULE_BUILDERS = {
+    "ring": ring_schedule,
+    "lumorph2": rhd_schedule,
+    "lumorph4": rqq_schedule,
+}
+
+
+def build_schedule(algo: str, chips: Sequence[int], n_bytes: float) -> Schedule:
+    try:
+        builder = SCHEDULE_BUILDERS[algo]
+    except KeyError:
+        raise ValueError(f"no schedule builder for {algo!r}; have {sorted(SCHEDULE_BUILDERS)}")
+    return builder(chips, n_bytes)
+
+
+# ---------------------------------------------------------------------------
+# fiber-aware placement
+# ---------------------------------------------------------------------------
+
+def fiber_demand(schedule: Schedule, tiles_per_server: int) -> int:
+    """Peak per-server-pair fiber demand across the schedule's rounds."""
+    peak = 0
+    for r in schedule.rounds:
+        per_pair: dict[tuple[int, int], int] = {}
+        for s, d in r.pairs:
+            ss, ds = s // tiles_per_server, d // tiles_per_server
+            if ss != ds:
+                key = (min(ss, ds), max(ss, ds))
+                per_pair[key] = per_pair.get(key, 0) + 1
+        if per_pair:
+            peak = max(peak, max(per_pair.values()))
+    return peak
+
+
+def order_for_locality(chips: Sequence[int], tiles_per_server: int,
+                       radix: int = 4) -> list[int]:
+    """Reorder a tenant's chips so low-stride (frequent, intra-group)
+    collective rounds stay inside servers and only high-stride rounds cross
+    fibers: sort by server, then fill digit groups server-by-server.
+
+    For LUMORPH-2/4 the partner maps are index-arithmetic over the chip
+    *list*, so placement is free — this is the software knob the photonic
+    fabric gives us that a fixed torus does not (paper §3).
+    """
+    by_server: dict[int, list[int]] = {}
+    for c in chips:
+        by_server.setdefault(c // tiles_per_server, []).append(c)
+    out: list[int] = []
+    for srv in sorted(by_server, key=lambda s: -len(by_server[s])):
+        out.extend(sorted(by_server[srv]))
+    return out

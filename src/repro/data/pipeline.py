@@ -1,0 +1,65 @@
+"""Deterministic synthetic token pipeline (sharded, seeded, restartable).
+
+Production semantics without external data dependencies:
+
+  * every batch is a pure function of (seed, step) — restart from a
+    checkpoint at step k reproduces the exact remaining stream (no state
+    files needed, the gold standard for elastic restarts);
+  * per-host sharding: host h of H materializes only rows
+    ``h::H`` of the global batch (here H=1, but the slicing logic is what
+    a 1000-node deployment uses);
+  * the token stream is a Zipf-ish mixture (realistic softmax/router load,
+    unlike uniform tokens which flatten MoE routing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    host_id: int = 0
+    n_hosts: int = 1
+
+
+def batch_at(step: int, cfg: ModelConfig, data: DataConfig) -> dict:
+    """The global batch for ``step`` (deterministic in (seed, step))."""
+    rng = np.random.Generator(np.random.Philox(key=data.seed, counter=[0, 0, 0, step]))
+    b, s = data.global_batch, data.seq_len
+    # Zipf-like marginal over the vocab, fixed by the seed
+    v = cfg.vocab_size
+    ranks = rng.permutation(v)
+    u = rng.random((b, s))
+    zipf = (v ** u - 1) / (v - 1)  # inverse-CDF of a log-uniform
+    tokens = ranks[np.clip((zipf * v).astype(np.int64), 0, v - 1)]
+    out = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    if cfg.kind == "vlm":
+        out["image_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.num_image_tokens, cfg.d_model), np.float32))
+    if cfg.kind == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq_len, cfg.d_model), np.float32))
+    return out
+
+
+def host_slice(batch: dict, data: DataConfig) -> dict:
+    """Rows this host owns (h::H)."""
+    return {k: v[data.host_id::data.n_hosts] for k, v in batch.items()}
+
+
+def stream(cfg: ModelConfig, data: DataConfig, start_step: int = 0):
+    """Infinite deterministic batch iterator starting at ``start_step``."""
+    step = start_step
+    while True:
+        yield step, host_slice(batch_at(step, cfg, data), data)
+        step += 1

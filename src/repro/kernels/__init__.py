@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three artifacts: the pl.pallas_call implementation with
+explicit BlockSpec VMEM tiling (<name>.py), the jit'd public wrapper
+(ops.py, auto-selects interpret mode off-TPU), and the pure-jnp oracle
+(ref.py) that tests assert against.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

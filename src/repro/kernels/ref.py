@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: [BH, Sq, D]; k/v: [BKV, Skv, D]; GQA broadcast by repetition."""
+    bh, sq, d = q.shape
+    bkv, skv, _ = k.shape
+    n_rep = bh // bkv
+    k = jnp.repeat(k, n_rep, axis=0)
+    v = jnp.repeat(v, n_rep, axis=0)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def reference_quantize_int8(x: jax.Array, block: int = 256):
+    n = x.shape[0]
+    pad = (-n) % block
+    xf = jnp.pad(x.astype(jnp.float32), (0, pad)).reshape(-1, block)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def reference_dequantize_int8(q: jax.Array, scales: jax.Array, n: int,
+                              block: int = 256) -> jax.Array:
+    xf = q.astype(jnp.float32).reshape(-1, block) * scales[:, None]
+    return xf.reshape(-1)[:n]

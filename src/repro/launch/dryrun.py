@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the real jitted step (train / prefill /
+decode) with the production sharding policy, calls ``.lower().compile()``
+against ShapeDtypeStruct stand-ins (no allocation), and records:
+
+  * ``compiled.memory_analysis()``  — per-device bytes (proves it fits),
+  * ``compiled.cost_analysis()``    — per-device HLO FLOPs / bytes accessed,
+  * collective payload bytes parsed from the optimized HLO text,
+
+into ``experiments/dryrun/<arch>__<shape>__<mesh>[__unroll].json`` for the
+roofline analysis (§Roofline) to consume.
+
+Usage:
+  python -m repro.launch.dryrun --arch h2o-danube-1.8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh multi           # every cell
+  python -m repro.launch.dryrun --all --mesh single --unroll # roofline pass
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, cells_for, get_config
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.sharding.policy import make_policy
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[8,128]{1,0}' → bytes.  Tuples handled by the caller."""
+    m = re.match(r"(\w+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device payload bytes of every collective op in optimized HLO.
+
+    The result shape of each collective is its per-device payload (SPMD HLO
+    shapes are already per-device).  Tuple-shaped results sum elements.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    #  %name = TYPE[dims]{layout} op-name(...)   or   tuple results
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")[-\w.]*\(")
+    for m in pat.finditer(hlo_text):
+        shape_str, op = m.groups()
+        if shape_str.startswith("("):
+            total = sum(_shape_bytes(s.strip()) for s in shape_str[1:-1].split(","))
+        else:
+            total = _shape_bytes(shape_str)
+        out[op]["count"] += 1
+        out[op]["bytes"] += total
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in _COLLECTIVES)
+    out["total_count"] = sum(v["count"] for k, v in out.items() if k in _COLLECTIVES)
+    return out
+
+
+#: perf-pass sharding/runtime variants (EXPERIMENTS.md §Perf)
+VARIANTS = {
+    "": {},
+    "dp_only": {"flat_dp": True, "param_dtype": "bfloat16",
+                "remat_policy": "dots"},
+    "serve_ws": {"replicate_batch": True},
+    "dots": {"remat_policy": "dots"},
+    "noremat": {"remat": False},
+    "mb4": {"microbatches": 4},
+    "serve_ws_int8kv": {"replicate_batch": True, "kv_cache_dtype": "int8"},
+    "int8kv": {"kv_cache_dtype": "int8"},
+    "mb4_dots": {"microbatches": 4, "remat_policy": "dots"},
+}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, unroll: bool = False,
+               comm: str = "xla", compress: bool = False, variant: str = ""):
+    """Returns (lower_fn) producing the lowered computation for one cell."""
+    cfg = get_config(arch)
+    if unroll:
+        cfg = cfg.replace(unroll_layers=True)
+    var = VARIANTS[variant]
+    cfg_over = {k: v for k, v in var.items()
+                if k in ("param_dtype", "remat_policy", "remat", "kv_cache_dtype")}
+    if cfg_over:
+        cfg = cfg.replace(**cfg_over)
+    shape = SHAPES[shape_name]
+    policy = make_policy(cfg, mesh, flat_dp=bool(var.get("flat_dp")),
+                         replicate_batch=bool(var.get("replicate_batch")))
+    params_shape = tf.param_shapes(cfg)
+    p_structs = steps_lib.sharded_struct(params_shape, policy.param_specs(params_shape), policy)
+
+    if shape.step == "train":
+        step = steps_lib.make_train_step(cfg, policy, comm=comm,
+                                         compress=compress, donate=False,
+                                         microbatches=var.get("microbatches", 1))
+        o_shape = steps_lib.opt_shapes(cfg, params_shape)
+        o_structs = steps_lib.sharded_struct(o_shape, policy.opt_specs(o_shape), policy)
+        batch, _ = steps_lib.input_specs(cfg, policy, shape.seq_len, shape.global_batch)
+        return lambda: step.lower(p_structs, o_structs, batch)
+    if shape.step == "prefill":
+        step = steps_lib.make_prefill(cfg, policy)
+        batch, _ = steps_lib.input_specs(cfg, policy, shape.seq_len, shape.global_batch)
+        return lambda: step.lower(p_structs, batch)
+    # decode
+    step = steps_lib.make_decode_step(cfg, policy, shape.global_batch, shape.seq_len)
+    cache_shape = jax.eval_shape(lambda: tf.init_caches(cfg, shape.global_batch, shape.seq_len))
+    c_structs = steps_lib.sharded_struct(cache_shape, policy.cache_specs(cache_shape), policy)
+    toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return lambda: step.lower(p_structs, c_structs, toks, pos)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, unroll: bool = False,
+             comm: str = "xla", compress: bool = False, save: bool = True,
+             variant: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "unroll": unroll, "comm": comm, "compress": compress,
+           "variant": variant, "n_devices": mesh.size}
+    try:
+        lower_fn = build_cell(arch, shape_name, mesh, unroll=unroll, comm=comm,
+                              compress=compress, variant=variant)
+        lowered = lower_fn()
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops": ca.get("flops", 0.0),
+                       "bytes_accessed": ca.get("bytes accessed", 0.0)}
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["ok"] = True
+    except Exception as e:  # record the failure for triage, then re-raise in --strict
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{mesh_kind}" + ("__unroll" if unroll else "")
+        if comm != "xla":
+            tag += f"__{comm}" + ("_int8" if compress else "")
+        if variant:
+            tag += f"__{variant}" 
+        (OUT_DIR / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true", help="every assigned arch × its shapes")
+    ap.add_argument("--unroll", action="store_true", help="roofline accounting mode")
+    ap.add_argument("--comm", default="xla",
+                    choices=["xla", "ring", "lumorph2", "lumorph4", "auto"])
+    ap.add_argument("--compress", action="store_true", help="int8 gradient collectives")
+    ap.add_argument("--variant", default="", choices=list(VARIANTS))
+    ap.add_argument("--strict", action="store_true", help="exit non-zero on any failure")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in cells_for(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.mesh, unroll=args.unroll,
+                       comm=args.comm, compress=args.compress,
+                       variant=args.variant)
+        status = "OK " if rec["ok"] else "FAIL"
+        extra = (f"flops/dev={rec['cost']['flops']:.3e} "
+                 f"coll={rec['collectives']['total_bytes']:.3e}B "
+                 f"temp={rec['memory']['temp_bytes']/1e9:.2f}GB"
+                 if rec["ok"] else rec["error"][:120])
+        print(f"[{status}] {arch:24s} {shape:12s} {args.mesh:6s} "
+              f"lower+compile={rec['total_s']:7.1f}s  {extra}", flush=True)
+        failures += 0 if rec["ok"] else 1
+    if failures:
+        print(f"{failures}/{len(cells)} cells FAILED")
+        if args.strict:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

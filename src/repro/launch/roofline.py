@@ -1,0 +1,144 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` and derives, per (arch × shape × mesh):
+
+  compute term    = HLO_FLOPs/dev ÷ 197 TFLOP/s          (v5e bf16 peak)
+  memory term     = HLO_bytes/dev ÷ 819 GB/s             (v5e HBM)
+  collective term = collective_bytes/dev ÷ 50 GB/s       (ICI per link)
+
+cost_analysis() is per-device (calibrated: an 8-way-sharded matmul reports
+total/8) and HLO shapes in SPMD programs are per-device, so all three
+numerators are already per-chip.  ``lax.scan`` bodies are counted **once**
+by XLA's cost analysis, so the roofline pass uses the ``--unroll`` dry-run
+records (exact per-layer accounting); scan-over-time blocks (sLSTM) remain
+under-counted and are flagged via the MODEL_FLOPS ratio column.
+
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (prefill) / 2·N_active·B
+(decode, one token per sequence).  The ratio MODEL_FLOPS / (HLO_FLOPs ×
+chips) exposes remat/redundancy waste (>1 means HLO under-counts, e.g.
+scan; <1 means recompute/overhead).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--unroll]
+      [--out experiments/roofline.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+EXP_DIR = Path(__file__).resolve().parents[3] / "experiments"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.step == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.step == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    flops = rec["cost"]["flops"]
+    byts = rec["cost"]["bytes_accessed"]
+    coll = rec["collectives"]["total_bytes"]
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    t_model = mf / chips / PEAK_FLOPS
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "model_hlo_ratio": mf / max(flops * chips, 1.0),
+        "roofline_frac": min(t_model / bound, 1.0) if bound > 0 else 0.0,
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "collective_detail": {k: v for k, v in rec["collectives"].items()
+                              if isinstance(v, dict) and v.get("count")},
+    }
+
+
+SUGGESTIONS = {
+    "compute": "compute-bound: raise MXU utilization (fused attention kernel, "
+               "bf16 everywhere, larger per-chip batch) or shrink redundant "
+               "recompute (remat policy)",
+    "memory": "HBM-bound: fuse norm/attention epilogues (Pallas), widen "
+              "arithmetic intensity (bigger KV blocks, int8 KV), or re-tile "
+              "so weights stream once per step",
+    "collective": "collective-bound: re-shard to cut all-gather volume "
+                  "(ZeRO boundary, TP axis choice), overlap via bucketed "
+                  "LUMORPH-4 (α↓) or int8 payloads (β↓)",
+}
+
+
+def load_records(mesh: str, unroll: bool) -> list[dict]:
+    recs = []
+    for p in sorted((EXP_DIR / "dryrun").glob("*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            continue
+        if r["mesh"] != mesh or bool(r.get("unroll")) != unroll:
+            continue
+        if r.get("comm", "xla") != "xla" or r.get("compress") or r.get("variant"):
+            continue  # comm/sharding variants are §Perf artifacts, not baselines
+        recs.append(r)
+    return recs
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+           "| dominant | 6ND/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['model_hlo_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} |\n")
+    return "".join(out)
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    recs = load_records(args.mesh, args.unroll)
+    rows = [analyze_record(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    md = to_markdown(rows)
+    print(md)
+    out = args.out or (EXP_DIR / f"roofline_{args.mesh}{'_unroll' if args.unroll else ''}.md")
+    Path(out).write_text(md)
+    (EXP_DIR / f"roofline_{args.mesh}{'_unroll' if args.unroll else ''}.json").write_text(
+        json.dumps(rows, indent=1, default=str))
+    # dominant-term summary + suggestions
+    for dom in ("compute", "memory", "collective"):
+        n = sum(1 for r in rows if r["dominant"] == dom)
+        if n:
+            print(f"{n:3d} cells {dom}-bound → {SUGGESTIONS[dom]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: layers, attention, MoE, SSM, transformer assembly."""
+
+from repro.models.transformer import (decode_step, forward_logits, init_caches,  # noqa: F401
+                                      init_params, loss_fn, param_shapes,
+                                      segments_of)

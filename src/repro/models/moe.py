@@ -1,0 +1,106 @@
+"""Mixture-of-Experts with capacity-based sort-free dispatch (GShard-style,
+scatter implementation) — expert-parallel friendly.
+
+Dispatch is computed **per token group** (one group per batch row), so the
+dispatch buffers carry a leading group dim that shards over the data axis
+while the expert dim shards over the model axis (expert parallelism).  The
+XLA SPMD partitioner turns the gather/scatter between token-sharded and
+expert-sharded layouts into the MoE all-to-alls the LUMORPH cost model
+prices.
+
+Tokens beyond an expert's capacity are dropped (standard GShard semantics);
+``capacity_factor`` controls the slack.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(rng: Array, d: int, d_ff: int, n_experts: int,
+             n_shared: int = 0, shared_d_ff: int | None = None,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, n_experts), scale=0.1, dtype=jnp.float32),
+        "wi": dense_init(ks[1], (n_experts, d, d_ff), dtype=dtype),
+        "wg": dense_init(ks[2], (n_experts, d, d_ff), dtype=dtype),
+        "wo": dense_init(ks[3], (n_experts, d_ff, d), dtype=dtype),
+    }
+    if n_shared:
+        sdf = shared_d_ff or n_shared * d_ff
+        sub = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wi": dense_init(sub[0], (d, sdf), dtype=dtype),
+            "wg": dense_init(sub[1], (d, sdf), dtype=dtype),
+            "wo": dense_init(sub[2], (sdf, d), dtype=dtype),
+        }
+    return p
+
+
+def apply_moe(p: dict, x: Array, top_k: int, capacity_factor: float = 1.25) -> tuple[Array, Array]:
+    """x: [B, S, D] → (y, aux_loss).  Groups = batch rows.
+
+    aux_loss is the standard load-balancing loss (Switch §2.2): E·Σ f_e·P_e.
+    """
+    b, s, d = x.shape
+    dt = x.dtype
+    e = p["wi"].shape[0]
+    # ---- routing (fp32) ----
+    logits = (x.astype(jnp.float32) @ p["router"])  # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)  # [B,S,k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss
+    me = probs.mean(axis=(0, 1))  # [E] mean router prob
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (b * s * top_k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(s * top_k / e * capacity_factor))
+    # ---- position of each (token, choice) within its expert, per group ----
+    # sort-based ranking: O(T log T) ints instead of the [T, E] one-hot
+    # cumsum (which costs T·E·4 bytes — the dominant HBM term for
+    # fine-grained MoE; see EXPERIMENTS.md §Perf iteration a2).  A stable
+    # argsort preserves token order within each expert, matching the
+    # cumsum dispatch exactly.
+    t = s * top_k
+    assign = idx.reshape(b, t)  # [B, T]
+    sort_idx = jnp.argsort(assign, axis=1, stable=True)
+    sorted_assign = jnp.take_along_axis(assign, sort_idx, axis=1)
+    first = jax.vmap(lambda sa: jnp.searchsorted(sa, sa, side="left"))(sorted_assign)
+    pos_sorted = jnp.arange(t, dtype=jnp.int32)[None] - first.astype(jnp.int32)
+    pos_in_e = jnp.zeros((b, t), jnp.int32).at[
+        jnp.arange(b)[:, None], sort_idx].set(pos_sorted)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, assign * cap + pos_in_e, e * cap)  # overflow → trash row
+
+    # ---- dispatch: [B, E*cap (+1 trash), D] ----
+    tok = jnp.repeat(jnp.arange(s), top_k)  # [S*k] source token per assignment
+    xt = x  # [B,S,D]
+    buf = jnp.zeros((b, e * cap + 1, d), dt)
+    src = jnp.take(xt, tok, axis=1)  # [B, S*k, D]
+    buf = jax.vmap(lambda bb, ss, vv: bb.at[ss].add(vv))(buf, slot, src)
+    buf = buf[:, : e * cap].reshape(b, e, cap, d)
+
+    # ---- expert computation (E shards over the model axis) ----
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dt))) * \
+        jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dt))
+    y = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt))  # [B,E,cap,D]
+
+    # ---- combine ----
+    yt = y.reshape(b, e * cap, d)
+    yt = jnp.concatenate([yt, jnp.zeros((b, 1, d), dt)], axis=1)  # trash row reads 0
+    gathered = jax.vmap(lambda yy, ss: jnp.take(yy, ss, axis=0))(yt, slot)  # [B,S*k,D]
+    gathered = gathered * (gates.reshape(b, s * top_k, 1) * keep[..., None]).astype(dt)
+    out = gathered.reshape(b, s, top_k, d).sum(axis=2)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["wg"].astype(dt)) * (x @ sp["wi"].astype(dt))
+        out = out + hs @ sp["wo"].astype(dt)
+    return out, aux

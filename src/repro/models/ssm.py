@@ -1,0 +1,366 @@
+"""State-space & recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+Mamba2 uses the **chunked SSD** formulation (Dao & Gu 2024): intra-chunk
+quadratic attention-like matmuls (MXU-friendly) + an inter-chunk scan over
+chunk states — the TPU-native way to train SSMs (long matmuls instead of a
+4096-step scan).  Decode uses the O(1) recurrent form.
+
+xLSTM (Beck et al. 2024): mLSTM uses its parallel (quadratic, stabilized
+exponential-gating) form for training and a matrix-memory recurrence for
+decode; sLSTM is inherently sequential (hidden-to-hidden recurrence) and
+runs as a ``lax.scan`` over time.
+
+Simplifications vs the reference CUDA implementations are documented in
+DESIGN.md §8 (e.g. single B/C group in Mamba2, block-diagonal sLSTM
+recurrence).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (shared by mamba2 / xlstm front-ends)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: Array, w: Array, b: Array | None = None) -> Array:
+    """x [B,S,C], w [K,C] depthwise causal; returns [B,S,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],  # [K, 1, C] (HWIO with feature groups)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv_step(x_new: Array, conv_state: Array, w: Array, b: Array | None = None
+              ) -> tuple[Array, Array]:
+    """One-token causal conv. x_new [B,C]; conv_state [B,K-1,C] (history)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(rng: Array, d: int, d_state: int, headdim: int = 64,
+                expand: int = 2, conv_k: int = 4, dtype=jnp.float32) -> dict:
+    d_inner = expand * d
+    nheads = d_inner // headdim
+    ks = jax.random.split(rng, 5)
+    conv_dim = d_inner + 2 * d_state  # x + B + C share the conv
+    return {
+        # in_proj → [z, xBC, dt]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * d_state + nheads), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_k, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[2], (d_inner, d), dtype=dtype),
+    }
+
+
+def _mamba2_split(p: dict, x: Array, d: int, d_state: int, headdim: int, expand: int):
+    d_inner = expand * d
+    nheads = d_inner // headdim
+    dt_ = x @ p["w_in"].astype(x.dtype)
+    z = dt_[..., :d_inner]
+    xBC = dt_[..., d_inner: 2 * d_inner + 2 * d_state]
+    dt = dt_[..., 2 * d_inner + 2 * d_state:]
+    return z, xBC, dt, d_inner, nheads
+
+
+def mamba2_forward(p: dict, x: Array, d_state: int, headdim: int = 64,
+                   expand: int = 2, chunk: int = 128) -> Array:
+    """Training/prefill path: chunked SSD. x [B,S,D] → [B,S,D]."""
+    b, s, d = x.shape
+    dt_in = x.dtype
+    z, xBC, dt, d_inner, nheads = _mamba2_split(p, x, d, d_state, headdim, expand)
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"].astype(dt_in), p["conv_b"].astype(dt_in)))
+    xs = xBC[..., :d_inner].reshape(b, s, nheads, headdim)
+    B = xBC[..., d_inner:d_inner + d_state]  # single group, shared over heads
+    C = xBC[..., d_inner + d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["A_log"])  # [H], negative
+    # pad sequence to a chunk multiple
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    # reshape to chunks: [B, nc, Q, ...]
+    xs = xs.reshape(b, nc, chunk, nheads, headdim).astype(jnp.float32)
+    B = B.reshape(b, nc, chunk, d_state).astype(jnp.float32)
+    C = C.reshape(b, nc, chunk, d_state).astype(jnp.float32)
+    dt = dt.reshape(b, nc, chunk, nheads)
+
+    loga = dt * A  # [B,nc,Q,H] log decay per step
+    cum = jnp.cumsum(loga, axis=2)  # inclusive cumulative log decay
+    # intra-chunk: M[t,s] = exp(cum[t]-cum[s]) for t>=s (decay s→t, exclusive of s)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp (upper-triangle diffs are large-positive → exp would
+    # overflow and poison the where-gradient with 0·inf = NaN)
+    M = jnp.where(tri, jnp.exp(jnp.where(tri, diff, 0.0)), 0.0)
+    G = jnp.einsum("bctn,bcsn->bcts", C, B)  # [B,nc,Q,Q]
+    W = G[..., None] * M  # [B,nc,Q,Q,H]
+    xdt = xs * dt[..., None]  # dt_s B_s x_s (B applied via G)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", W, xdt)
+    # chunk end states: S_c = Σ_s exp(cum[Q-1]-cum[s]) dt_s B_s ⊗ x_s → [B,nc,H,P,N]
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    S_c = jnp.einsum("bcsh,bcsn,bcshp->bchpn", decay_to_end * dt, B, xs)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] total chunk decay
+
+    def scan_fn(h_prev, inp):
+        dec, s_c = inp  # dec [B,H], s_c [B,H,P,N]
+        h = h_prev * dec[:, :, None, None] + s_c
+        return h, h_prev  # emit the *incoming* state for y_inter
+
+    h0 = jnp.zeros((b, nheads, headdim, d_state), jnp.float32)
+    _, h_in = jax.lax.scan(scan_fn, h0,
+                           (chunk_decay.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering each chunk
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", jnp.exp(cum), C, h_in)
+    y = (y_intra + y_inter).reshape(b, sp, nheads, headdim)[:, :s]
+    y = y + xs.reshape(b, sp, nheads, headdim)[:, :s] * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(dt_in)
+    y = y * jax.nn.silu(z)  # gated
+    y = rmsnorm(y, p["norm_w"])
+    return y @ p["w_out"].astype(dt_in)
+
+
+def init_mamba2_state(batch: int, d: int, d_state: int, headdim: int = 64,
+                      expand: int = 2, conv_k: int = 4, dtype=jnp.float32) -> dict:
+    d_inner = expand * d
+    nheads = d_inner // headdim
+    return {
+        "h": jnp.zeros((batch, nheads, headdim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, d_inner + 2 * d_state), dtype),
+    }
+
+
+def mamba2_step(p: dict, x: Array, state: dict, d_state: int, headdim: int = 64,
+                expand: int = 2) -> tuple[Array, dict]:
+    """O(1) decode step. x [B,1,D] → ([B,1,D], state)."""
+    b, _, d = x.shape
+    dt_in = x.dtype
+    z, xBC, dt, d_inner, nheads = _mamba2_split(p, x[:, 0], d, d_state, headdim, expand)
+    xBC, conv_state = conv_step(xBC, state["conv"].astype(dt_in),
+                                p["conv_w"].astype(dt_in), p["conv_b"].astype(dt_in))
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_inner].reshape(b, nheads, headdim).astype(jnp.float32)
+    B = xBC[..., d_inner:d_inner + d_state].astype(jnp.float32)
+    C = xBC[..., d_inner + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)  # [B,H]
+    h = state["h"] * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, B, xs)
+    y = jnp.einsum("bn,bhpn->bhp", C, h) + xs * p["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(dt_in)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm_w"])
+    out = (y @ p["w_out"].astype(dt_in))[:, None, :]
+    return out, {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng: Array, d: int, n_heads: int, expand: int = 2,
+               conv_k: int = 4, dtype=jnp.float32) -> dict:
+    d_inner = expand * d
+    hd = d_inner // n_heads
+    ks = jax.random.split(rng, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_inner), dtype=dtype),  # [x_m, z]
+        "conv_w": (jax.random.normal(ks[1], (conv_k, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": dense_init(ks[2], (d_inner, n_heads, hd), dtype=dtype),
+        "wk": dense_init(ks[3], (d_inner, n_heads, hd), dtype=dtype),
+        "wv": dense_init(ks[4], (d_inner, n_heads, hd), dtype=dtype),
+        "w_if": dense_init(ks[5], (d_inner, 2 * n_heads), scale=0.1, dtype=jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]),
+        "norm_w": jnp.zeros((d_inner,), jnp.float32),
+        "w_down": dense_init(ks[6], (d_inner, d), dtype=dtype),
+    }
+
+
+def mlstm_forward(p: dict, x: Array, n_heads: int, expand: int = 2) -> Array:
+    """Parallel (quadratic) stabilized mLSTM. x [B,S,D]."""
+    b, s, d = x.shape
+    dt_in = x.dtype
+    d_inner = expand * d
+    hd = d_inner // n_heads
+    up = x @ p["w_up"].astype(dt_in)
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    xc = jax.nn.silu(causal_conv1d(xm, p["conv_w"].astype(dt_in), p["conv_b"].astype(dt_in)))
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(dt_in))
+    k = jnp.einsum("bsd,dhk->bshk", xc, p["wk"].astype(dt_in))
+    v = jnp.einsum("bsd,dhk->bshk", xm, p["wv"].astype(dt_in))
+    gif = xc.astype(jnp.float32) @ p["w_if"] + p["if_bias"]  # [B,S,2H]
+    i_raw, f_raw = gif[..., :n_heads], gif[..., n_heads:]
+    logf = jax.nn.log_sigmoid(f_raw)  # [B,S,H]
+    F = jnp.cumsum(logf, axis=1)
+    # D_log[t,s] = F_t − F_s + i_s  (t ≥ s)
+    dlog = F[:, :, None, :] - F[:, None, :, :] + i_raw[:, None, :, :]  # [B,T,S,H]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    dlog = jnp.where(tri[None, :, :, None], dlog, -jnp.inf)
+    m = jnp.max(dlog, axis=2)  # [B,T,H] row stabilizer
+    w = jnp.exp(dlog - m[:, :, None, :])  # [B,T,S,H]
+    scores = jnp.einsum("bthk,bshk->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    sw = scores * w
+    denom = jnp.maximum(jnp.abs(sw.sum(axis=2)), jnp.exp(-m))  # [B,T,H]
+    h = jnp.einsum("btsh,bshk->bthk", sw, v.astype(jnp.float32)) / denom[..., None]
+    h = h.reshape(b, s, d_inner)
+    h = rmsnorm(h.astype(dt_in), p["norm_w"])
+    h = h * jax.nn.silu(z)
+    return h @ p["w_down"].astype(dt_in)
+
+
+def init_mlstm_state(batch: int, d: int, n_heads: int, expand: int = 2,
+                     conv_k: int = 4, dtype=jnp.float32) -> dict:
+    d_inner = expand * d
+    hd = d_inner // n_heads
+    return {
+        "C": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, n_heads), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, conv_k - 1, d_inner), dtype),
+    }
+
+
+def mlstm_step(p: dict, x: Array, state: dict, n_heads: int, expand: int = 2
+               ) -> tuple[Array, dict]:
+    """Recurrent mLSTM step. x [B,1,D]."""
+    b, _, d = x.shape
+    dt_in = x.dtype
+    d_inner = expand * d
+    hd = d_inner // n_heads
+    up = x[:, 0] @ p["w_up"].astype(dt_in)
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    xc, conv_state = conv_step(xm, state["conv"].astype(dt_in),
+                               p["conv_w"].astype(dt_in), p["conv_b"].astype(dt_in))
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bd,dhk->bhk", xc, p["wq"].astype(dt_in)).astype(jnp.float32)
+    k = jnp.einsum("bd,dhk->bhk", xc, p["wk"].astype(dt_in)).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", xm, p["wv"].astype(dt_in)).astype(jnp.float32)
+    gif = xc.astype(jnp.float32) @ p["w_if"] + p["if_bias"]
+    i_raw, f_raw = gif[..., :n_heads], gif[..., n_heads:]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state["m"], i_raw)  # [B,H]
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    i_s = jnp.exp(i_raw - m_new)
+    C = state["C"] * f_s[..., None, None] + i_s[..., None, None] * jnp.einsum(
+        "bhk,bhn->bhkn", v, k)
+    n = state["n"] * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhkn,bhn->bhk", C, q / math.sqrt(hd))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhn,bhn->bh", n, q / math.sqrt(hd))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, d_inner)
+    h = rmsnorm(h.astype(dt_in), p["norm_w"])
+    h = h * jax.nn.silu(z)
+    out = (h @ p["w_down"].astype(dt_in))[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM — sLSTM (scalar memory, sequential)
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng: Array, d: int, n_heads: int, dtype=jnp.float32) -> dict:
+    hd = d // n_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        # input projections for gates i,f,z,o
+        "w_x": dense_init(ks[0], (d, 4 * d), dtype=dtype),
+        # block-diagonal recurrent weights per head: [H, hd, 4*hd]
+        "w_h": (jax.random.normal(ks[1], (n_heads, hd, 4 * hd)) / math.sqrt(hd)).astype(dtype),
+        "bias": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                                 jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "norm_w": jnp.zeros((d,), jnp.float32),
+        "w_up": dense_init(ks[2], (d, 2 * d), dtype=dtype),   # GLU-style post-MLP
+        "w_down": dense_init(ks[3], (d, d), dtype=dtype),
+    }
+
+
+def init_slstm_state(batch: int, d: int, n_heads: int) -> dict:
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p: dict, xt: Array, st: dict, n_heads: int) -> dict:
+    """One sLSTM timestep. xt [B, 4d] (pre-projected input)."""
+    b = xt.shape[0]
+    d = st["h"].shape[-1]
+    hd = d // n_heads
+    hh = st["h"].reshape(b, n_heads, hd)
+    rec = jnp.einsum("bhk,hkj->bhj", hh, p["w_h"].astype(jnp.float32)).reshape(b, 4 * d)
+    g = xt.astype(jnp.float32) + rec + p["bias"]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + st["m"], i_raw)
+    i_s = jnp.exp(i_raw - m_new)
+    f_s = jnp.exp(logf + st["m"] - m_new)
+    c = f_s * st["c"] + i_s * jnp.tanh(z_raw)
+    n = f_s * st["n"] + i_s
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p: dict, x: Array, n_heads: int) -> Array:
+    """Sequential sLSTM over time (lax.scan). x [B,S,D]."""
+    b, s, d = x.shape
+    dt_in = x.dtype
+    xp = x @ p["w_x"].astype(dt_in)  # [B,S,4d] (batched input projection)
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt, st, n_heads)
+        return st, st["h"]
+
+    st0 = init_slstm_state(b, d, n_heads)
+    _, hs = jax.lax.scan(step, st0, xp.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(dt_in)  # [B,S,D]
+    h = rmsnorm(h, p["norm_w"])
+    up = h @ p["w_up"].astype(dt_in)
+    h = jax.nn.gelu(up[..., :d], approximate=True) * up[..., d:]
+    return h @ p["w_down"].astype(dt_in)
+
+
+def slstm_step(p: dict, x: Array, state: dict, n_heads: int) -> tuple[Array, dict]:
+    """One-token sLSTM decode. x [B,1,D]."""
+    dt_in = x.dtype
+    d = x.shape[-1]
+    xt = (x[:, 0] @ p["w_x"].astype(dt_in))
+    st = _slstm_cell(p, xt, state, n_heads)
+    h = rmsnorm(st["h"].astype(dt_in), p["norm_w"])
+    up = h @ p["w_up"].astype(dt_in)
+    h = jax.nn.gelu(up[..., :d], approximate=True) * up[..., d:]
+    return (h @ p["w_down"].astype(dt_in))[:, None, :], st

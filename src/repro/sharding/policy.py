@@ -1,0 +1,306 @@
+"""Per-architecture sharding policy (DESIGN.md §4).
+
+Decides, per parameter/activation/cache leaf, which mesh axes shard which
+dimension:
+
+  * **TP** over the "model" axis: attention heads (when divisible), MLP
+    d_ff, MoE experts (expert parallelism), vocab for embeddings.
+  * **KV replication** when ``n_kv_heads % tp != 0`` (Megatron GQA rule).
+  * **Replicated mixers** for small-model blocks whose head counts don't
+    divide (xlstm 4H, whisper 6H, phi3 40H attention) — the model axis
+    still shards their embeddings / MLPs.
+  * **ZeRO-1** always: optimizer moments shard over the data axes on the
+    largest divisible dim not already sharded.
+  * **ZeRO-3** optionally (dbrx-132b): parameters themselves also shard
+    over the data axes.
+
+Specs are plain ``PartitionSpec``s keyed by pytree path, so the same policy
+serves param init, optimizer state, dry-run ShapeDtypeStructs and
+checkpoint resharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple[str, ...]  # ("data",) or ("pod", "data")
+    model: str = "model"
+
+
+def _size(mesh: Mesh, axes: tuple[str, ...] | str) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    cfg: ModelConfig
+    mesh: Mesh
+    axes: MeshAxes
+    zero3: bool = False
+    #: use the model axis as extra data parallelism (small models where
+    #: 16-way TP only buys activation all-reduces — §Perf iteration c2)
+    flat_dp: bool = False
+    #: replicate the batch (weight-stationary serving: tiny decode
+    #: activations move, multi-hundred-GB params stay put — §Perf b2)
+    replicate_batch: bool = False
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def tp(self) -> int:
+        return 1 if self.flat_dp else _size(self.mesh, self.axes.model)
+
+    @property
+    def dp(self) -> int:
+        return _size(self.mesh, self.axes.data)
+
+    def _dp_dim(self, shape: tuple[int, ...], taken: set[int]) -> Optional[int]:
+        """Largest dim divisible by dp and not already sharded."""
+        best = None
+        for i, s in enumerate(shape):
+            if i in taken or s % self.dp or s == 0:
+                continue
+            if best is None or s > shape[best]:
+                best = i
+        return best
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ----------------------------------------------------------------- params
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """PartitionSpec for one parameter leaf, by its pytree path string.
+
+        Stacked segment params carry a leading layer dim — detected by path
+        prefix "segments" — which is never sharded.
+        """
+        cfg, tp = self.cfg, self.tp
+        model = None if self.flat_dp else self.axes.model  # flat_dp: no TP
+        parts = path.split("/")
+        stacked = "segments" in parts or "layers" in parts
+        off = 1 if stacked else 0  # skip the layer-stack dim
+
+        def spec(*dims: Optional[str]) -> P:
+            out = [None] * off + list(dims)
+            out = out[: len(shape)] + [None] * (len(shape) - len(out))
+            if self.zero3:
+                taken = {i for i, d in enumerate(out) if d is not None}
+                i = self._dp_dim(shape, taken)
+                if i is not None:
+                    out[i] = self.axes.data
+            return P(*out)
+
+        heads_div = cfg.n_heads % tp == 0
+        kv_div = cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads > 0
+
+        leaf = path.split("/")[-1]
+        # -- embeddings -----------------------------------------------------
+        if path == "embed":
+            if cfg.vocab_size % tp == 0:
+                return spec_noff(shape, (model, None), self)
+            return spec_noff(shape, (None, None), self)
+        if path == "lm_head":
+            return spec_noff(shape, (None, model if cfg.vocab_size % tp == 0 else None), self)
+        if leaf in ("w", "b") or "ln" in path or "norm" in path:
+            return P(*([None] * len(shape)))  # norms replicated
+        # -- attention ------------------------------------------------------
+        if "/attn/" in path or "/xattn/" in path or "shared_block" in path and "/attn/" in path:
+            if leaf in ("wq",):
+                return spec(None, model if heads_div else None, None)
+            if leaf in ("wk", "wv"):
+                return spec(None, model if (heads_div and kv_div) else None, None)
+            if leaf == "wo":
+                return spec(model if heads_div else None, None, None)
+            if leaf == "bq":
+                return spec(model if heads_div else None, None)
+            if leaf in ("bk", "bv"):
+                return spec(model if (heads_div and kv_div) else None, None)
+            # MLA leaves
+            if leaf == "w_dkv":
+                return spec(None, None)  # latent rank kept whole (cache layout)
+            if leaf == "w_kpe":
+                return spec(None, None)
+            if leaf in ("w_uk", "w_uv"):
+                return spec(None, model if heads_div else None, None)
+        # -- MLP --------------------------------------------------------------
+        if "/mlp/" in path or ("shared" in path and leaf in ("wi", "wg", "wo")):
+            if leaf in ("wi", "wg"):
+                return spec(None, model)
+            if leaf == "wo":
+                return spec(model, None)
+        # -- MoE --------------------------------------------------------------
+        if "/moe/" in path:
+            ep = cfg.moe_experts % tp == 0 and cfg.moe_experts > 0
+            if leaf == "router":
+                return spec(None, None)
+            if leaf in ("wi", "wg"):
+                return spec(model if ep else None, None, None)
+            if leaf == "wo":
+                return spec(model if ep else None, None, None)
+        # -- mamba2 / xlstm mixers -------------------------------------------
+        if "/mix/" in path:
+            # replicated over model (small models; head counts don't divide) —
+            # ZeRO-3/ZeRO-1 still shard them over data.
+            return spec(*([None] * (len(shape) - off)))
+        if leaf == "shared_proj":
+            return spec(None, None)
+        return spec(*([None] * (len(shape) - off)))
+
+    def param_specs(self, shapes: PyTree) -> PyTree:
+        return _map_with_path(shapes, self.param_spec)
+
+    def param_shardings(self, shapes: PyTree) -> PyTree:
+        return jax.tree.map(self.named, self.param_specs(shapes))
+
+    # ------------------------------------------------------------- optimizer
+    def opt_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """ZeRO-1: like the param spec, plus data axes on a free dim."""
+        parts = path.split("/")
+        if parts and parts[0] in ("m", "v", "ef"):
+            path = "/".join(parts[1:])  # moments mirror the param tree
+        if path == "step" or not shape:
+            return P()
+        base = self.param_spec(path, shape)
+        dims = list(base) + [None] * (len(shape) - len(base))
+        used: set[str] = set()
+        for d in dims:
+            if d is None:
+                continue
+            used.update(d if isinstance(d, (tuple, list)) else (d,))
+        if used & set(self.axes.data):
+            return P(*dims)  # zero3 already placed the data axes
+        taken = {i for i, d in enumerate(dims) if d is not None}
+        i = self._dp_dim(shape, taken)
+        if i is not None:
+            dims[i] = self.axes.data if len(self.axes.data) > 1 else self.axes.data[0]
+        return P(*dims)
+
+    def opt_specs(self, shapes: PyTree) -> PyTree:
+        return _map_with_path(shapes, self.opt_spec)
+
+    # ----------------------------------------------------------------- batch
+    def batch_spec(self, name: str, shape: tuple[int, ...]) -> P:
+        if self.replicate_batch:
+            return P(*([None] * len(shape)))
+        dp = self.axes.data
+        b = shape[0] if shape else 0
+        if b and b % self.dp == 0:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))  # e.g. long_500k batch=1
+
+    def batch_specs(self, batch_shapes: dict) -> dict:
+        return {k: self.batch_spec(k, tuple(v.shape)) for k, v in batch_shapes.items()}
+
+    # ----------------------------------------------------------------- caches
+    def cache_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """Decode caches: batch over data; kv-heads/ssm-heads over model when
+        divisible; long-context (batch=1) KV shards the sequence dim over
+        data instead."""
+        cfg, tp, model = self.cfg, self.tp, self.axes.model
+        dp = self.axes.data
+        dims: list = [None] * len(shape)
+        b = shape[0]
+        if b % self.dp == 0:
+            dims[0] = dp
+            batch_sharded = True
+        else:
+            batch_sharded = False
+        leaf = path.split("/")[-1]
+        if leaf in ("k_scale", "v_scale") and len(shape) == 3:
+            # int8 KV scales follow the payload's (batch, seq) sharding
+            if cfg.n_kv_heads % tp != 0 and not self.flat_dp and shape[1] % tp == 0:
+                dims[1] = model
+            return P(*dims)
+        if leaf in ("k", "v") and len(shape) == 4:
+            if cfg.n_kv_heads % tp == 0 and not self.flat_dp:
+                dims[2] = model
+            elif not self.flat_dp and shape[1] % tp == 0:
+                # kv heads don't divide → shard the *sequence* over the
+                # model axis instead (decode attention reduces over seq:
+                # per-head scalar collectives replace whole-cache gathers —
+                # §Perf iteration on glm4 decode)
+                dims[1] = model
+            if not batch_sharded and shape[1] % self.dp == 0 and dims[1] is None:
+                dims[1] = dp  # shard 500k sequence over data
+        if leaf in ("cross_k", "cross_v") and len(shape) == 4:
+            if cfg.n_heads % tp == 0 and not self.flat_dp:
+                dims[2] = model
+        if leaf == "c_kv" and len(shape) == 3:
+            if not self.flat_dp and shape[1] % tp == 0:
+                dims[1] = model  # MLA latent cache: seq over model
+            elif not batch_sharded and shape[1] % self.dp == 0:
+                dims[1] = dp
+        if leaf == "h" and len(shape) == 4:  # mamba2 state [B,H,P,N]
+            nheads = shape[1]
+            if nheads % tp == 0:
+                dims[1] = model
+        if leaf == "C" and len(shape) == 4:  # mlstm matrix memory
+            if shape[1] % tp == 0:
+                dims[1] = model
+        if leaf == "pos" and len(shape) == 2:
+            if not batch_sharded and shape[1] % self.dp == 0:
+                dims[1] = dp
+        return P(*dims)
+
+    def cache_specs(self, cache_shapes: PyTree) -> PyTree:
+        return _map_with_path(cache_shapes, self.cache_spec)
+
+
+def spec_noff(shape, dims, policy: ShardingPolicy) -> P:
+    """Spec helper for non-stacked leaves, honoring ZeRO-3."""
+    out = list(dims)[: len(shape)] + [None] * (len(shape) - len(dims))
+    if policy.zero3:
+        taken = {i for i, d in enumerate(out) if d is not None}
+        i = policy._dp_dim(shape, taken)
+        if i is not None:
+            out[i] = policy.axes.data
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _map_with_path(tree: PyTree, fn) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_str(path), tuple(leaf.shape)), tree)
+
+
+def make_policy(cfg: ModelConfig, mesh: Mesh, multi_pod: bool | None = None,
+                zero3: Optional[bool] = None, flat_dp: bool = False,
+                replicate_batch: bool = False) -> ShardingPolicy:
+    if multi_pod is None:
+        multi_pod = "pod" in mesh.shape
+    data = ("pod", "data") if multi_pod else ("data",)
+    if flat_dp:
+        data = data + ("model",)  # the whole mesh becomes data parallelism
+    axes = MeshAxes(data=data)
+    if zero3 is None:
+        # dbrx-132b: 264 GB of bf16 params / 16-way TP > 16 GB v5e HBM → ZeRO-3
+        zero3 = cfg.param_count() * 2 / _size(mesh, axes.model) > 12e9
+    return ShardingPolicy(cfg=cfg, mesh=mesh, axes=axes, zero3=zero3,
+                          flat_dp=flat_dp, replicate_batch=replicate_batch)

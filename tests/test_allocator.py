@@ -1,0 +1,102 @@
+"""Multi-tenant allocation: LUMORPH fragmentation-freedom vs baselines."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (AllocationError, LumorphAllocator,
+                                  SipacAllocator, TorusAllocator)
+
+
+@given(st.lists(st.integers(min_value=1, max_value=40), min_size=1, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_lumorph_never_fragments(requests):
+    """Property (paper §3): LUMORPH accepts any request that fits the free
+    *count*, regardless of placement history."""
+    a = LumorphAllocator(64, tiles_per_server=8)
+    for i, k in enumerate(requests):
+        if k <= len(a.free):
+            alloc = a.allocate(f"t{i}", k)
+            assert len(alloc.chips) == k
+            assert alloc.overallocated == 0
+        else:
+            with pytest.raises(AllocationError):
+                a.allocate(f"t{i}", k)
+
+
+def test_lumorph_packs_servers():
+    a = LumorphAllocator(32, tiles_per_server=8)
+    alloc = a.allocate("t0", 8)
+    servers = {c // 8 for c in alloc.chips}
+    assert len(servers) == 1  # fits in one server → uses one server
+
+
+def test_torus_fragments():
+    """Fig 2a: after odd-shaped tenants, the torus strands free chips."""
+    t = TorusAllocator((4, 4, 4))
+    t.allocate("t0", 33)  # forces a 64-chip... no: rounds up to 2x4x8? → big box
+    # torus overallocates (slice sizes are boxes)
+    a0 = t.allocations["t0"]
+    assert a0.overallocated > 0
+    free = len(t.free)
+    # a request that fits the count but not any aligned box must fail
+    with pytest.raises(AllocationError):
+        t.allocate("t1", free)  # free chips exist but no aligned free box
+    # LUMORPH on the same history succeeds
+    l = LumorphAllocator(64, tiles_per_server=8)
+    l.allocate("t0", 33)
+    l.allocate("t1", 64 - 33)  # exact fit, no fragmentation
+
+
+def test_paper_fig2a_user4():
+    """Paper Fig 2a: after identical tenant history, User 4's request is
+    feasible on LUMORPH but not on the fixed-slice fabric (whose rounding
+    to aligned power-of-r blocks strands the capacity)."""
+    sip = SipacAllocator(16, r=2, ell=2)  # groups of 4
+    for i in range(4):
+        a = sip.allocate(f"u{i}", 3)      # rounds up to a whole 4-group
+        assert a.overallocated == 1
+    assert len(sip.free) == 0             # 4 chips wasted to slice rounding
+    with pytest.raises(AllocationError):
+        sip.allocate("user4", 4)
+    # LUMORPH, same tenant history: 4 chips remain genuinely free
+    lum = LumorphAllocator(16, tiles_per_server=4)
+    for i in range(4):
+        assert lum.allocate(f"u{i}", 3).overallocated == 0
+    alloc = lum.allocate("user4", 4)      # any 4 free chips form a slice
+    assert len(alloc.chips) == 4
+
+
+def test_release_returns_capacity():
+    a = LumorphAllocator(16)
+    a.allocate("t0", 10)
+    a.release("t0")
+    assert len(a.free) == 16
+    a.allocate("t1", 16)
+
+
+def test_fail_chips_reclaims_survivors():
+    a = LumorphAllocator(16)
+    alloc = a.allocate("t0", 8)
+    dead = list(alloc.chips[:2])
+    hit = a.fail_chips(dead)
+    assert hit == ["t0"]
+    assert len(a.free) == 14  # 8 released + 8 untouched − 2 dead
+    assert not set(dead) & a.free
+
+
+@given(st.integers(min_value=1, max_value=16))
+@settings(max_examples=50, deadline=None)
+def test_sipac_rounds_up_to_power_of_r(k):
+    s = SipacAllocator(64, r=2, ell=3)
+    alloc = s.allocate("t", k)
+    size = len(alloc.chips)
+    assert size >= k
+    if k <= 8:
+        assert size & (size - 1) == 0  # power of two
+
+
+def test_utilization_accounting():
+    a = LumorphAllocator(64)
+    assert a.utilization == 0.0
+    a.allocate("t0", 32)
+    assert a.utilization == pytest.approx(0.5)

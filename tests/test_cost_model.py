@@ -1,0 +1,106 @@
+"""α–β cost model: formula properties + the paper's headline claims."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+
+
+def test_ring_formula():
+    link = cm.LinkModel(alpha=1e-6, bw=1e9, reconfig=0.0)
+    n, p = 1e6, 8
+    expect = 2 * (p - 1) * (1e-6 + (n / p) / 1e9)
+    assert cm.ring_all_reduce_cost(n, p, link) == pytest.approx(expect)
+
+
+def test_rhd_beta_optimal():
+    """Recursive halving/doubling ships the same total bytes as Ring:
+    2·n·(p−1)/p — β-optimality (paper §3)."""
+    link = cm.LinkModel(alpha=0.0, bw=1.0, reconfig=0.0)  # pure β
+    for p in (2, 4, 8, 16, 64, 256):
+        n = 1024.0
+        ring = cm.ring_all_reduce_cost(n, p, link)
+        rhd = cm.rhd_all_reduce_cost(n, p, link)
+        assert rhd == pytest.approx(ring, rel=1e-9), (p, ring, rhd)
+
+
+def test_rhd_alpha_logarithmic():
+    link = cm.LinkModel(alpha=1.0, bw=1e30, reconfig=0.0)  # pure α
+    assert cm.rhd_all_reduce_cost(1.0, 256, link) == pytest.approx(2 * 8)
+    assert cm.ring_all_reduce_cost(1.0, 256, link) == pytest.approx(2 * 255 + 0)
+
+
+def test_lumorph4_alpha_log4_beta_parity():
+    """radix-4: log4(p) α-rounds per phase; and — a reproduction finding —
+    its β bytes TELESCOPE to the same 2·n·(p−1)/p as Ring/LUMORPH-2 when
+    the r−1 circuits of a round run simultaneously (per-round egress
+    (r−1)/r·chunk over shrinking chunks).  The paper's stated β-penalty
+    only materializes if per-circuit bandwidth is capped below egress/(r−1)
+    (e.g. wavelength-limited links); see EXPERIMENTS.md §Paper-validation."""
+    alpha_only = cm.LinkModel(alpha=1.0, bw=1e30, reconfig=0.0)
+    beta_only = cm.LinkModel(alpha=0.0, bw=1.0, reconfig=0.0)
+    p = 256
+    assert cm.rqq_all_reduce_cost(1.0, p, alpha_only) == pytest.approx(2 * 4)  # log4(256)=4
+    b2 = cm.rhd_all_reduce_cost(1e6, p, beta_only)
+    b4 = cm.rqq_all_reduce_cost(1e6, p, beta_only)
+    br = cm.ring_all_reduce_cost(1e6, p, beta_only)
+    assert b4 == pytest.approx(b2) == pytest.approx(br)
+
+
+def test_paper_claim_small_buffers_74pct():
+    """Fig 4b: LUMORPH-4 ≈ 80% faster than Ring on an ideal switch for
+    small buffers at 256 GPUs, *despite* the MZI reconfiguration delay."""
+    p = 256
+    small = 64 * 1024  # 64 KB
+    ring_ideal = cm.algorithm_cost("ring", small, p, cm.IDEAL_SWITCH)
+    l4 = cm.algorithm_cost("lumorph4", small, p, cm.LUMORPH_LINK)
+    speedup = 1 - l4 / ring_ideal
+    assert speedup > 0.74, f"only {speedup:.2%} faster"
+
+
+def test_large_buffers_ring_competitive():
+    """β-dominated regime: Ring (β-optimal, α-linear) catches back up."""
+    p = 64
+    huge = 1 << 30  # 1 GiB
+    ring = cm.algorithm_cost("ring", huge, p, cm.IDEAL_SWITCH)
+    l4 = cm.algorithm_cost("lumorph4", huge, p, cm.LUMORPH_LINK)
+    assert l4 > 0.9 * ring  # no free lunch at huge buffers
+
+
+def test_nonpow2_falls_back_to_ring():
+    link = cm.LUMORPH_LINK
+    assert cm.algorithm_cost("lumorph2", 1e6, 6, link) == \
+        pytest.approx(cm.ring_all_reduce_cost(1e6, 6, link))
+
+
+@given(st.integers(min_value=1, max_value=4096), st.integers(min_value=2, max_value=8))
+@settings(max_examples=200, deadline=None)
+def test_mixed_radix_factorization(p, radix):
+    fs = cm.mixed_radix_factorization(p, radix)
+    prod = 1
+    for f in fs:
+        prod *= f
+    assert prod == p
+    # all but possibly one (trailing prime) factor ≤ radix
+    assert sum(1 for f in fs if f > radix) <= 1
+
+
+@given(st.floats(min_value=1.0, max_value=1e10),
+       st.sampled_from([2, 4, 8, 16, 32, 64, 128, 256]))
+@settings(max_examples=100, deadline=None)
+def test_selector_picks_cheapest(n_bytes, p):
+    algo = cm.select_algorithm(n_bytes, p, cm.LUMORPH_LINK)
+    best = min(("ring", "lumorph2", "lumorph4"),
+               key=lambda a: cm.algorithm_cost(a, n_bytes, p, cm.LUMORPH_LINK))
+    assert cm.algorithm_cost(algo, n_bytes, p, cm.LUMORPH_LINK) == \
+        pytest.approx(cm.algorithm_cost(best, n_bytes, p, cm.LUMORPH_LINK))
+
+
+def test_costs_monotone_in_size():
+    for algo in cm.ALGORITHMS:
+        c1 = cm.algorithm_cost(algo, 1e3, 16, cm.LUMORPH_LINK)
+        c2 = cm.algorithm_cost(algo, 1e6, 16, cm.LUMORPH_LINK)
+        c3 = cm.algorithm_cost(algo, 1e9, 16, cm.LUMORPH_LINK)
+        assert c1 <= c2 <= c3

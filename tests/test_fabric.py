@@ -1,0 +1,62 @@
+"""LIGHTPATH fabric + LUMORPH rack resource model."""
+
+import pytest
+
+from repro.core.fabric import CircuitError, LightpathFabric, LumorphRack
+
+
+def test_trx_bank_exhaustion():
+    f = LightpathFabric(n_tiles=4, trx_banks_per_tile=2)
+    f.alloc_endpoint(0, 1)
+    f.alloc_endpoint(0, 2)
+    with pytest.raises(CircuitError):
+        f.alloc_endpoint(0, 3)  # TX banks on tile 0 exhausted
+
+
+def test_wavelength_budget():
+    f = LightpathFabric(n_tiles=2, trx_banks_per_tile=32, wavelengths_per_tile=3)
+    for _ in range(3):
+        f.alloc_endpoint(0, 1)
+    with pytest.raises(CircuitError):
+        f.alloc_endpoint(0, 1)
+
+
+def test_wafer_tile_limit():
+    with pytest.raises(ValueError):
+        LightpathFabric(n_tiles=64)
+
+
+def test_rack_intra_and_inter_server_circuits():
+    rack = LumorphRack(n_servers=2, tiles_per_server=4, trx_banks_per_tile=2,
+                       fibers_per_server_pair=1)
+    c1 = rack.establish(0, 1)      # same server
+    assert c1.via_fiber is None
+    c2 = rack.establish(2, 5)      # crosses servers → fiber 0
+    assert c2.via_fiber == 0
+    with pytest.raises(CircuitError):
+        rack.establish(3, 6)       # fiber budget exhausted
+    rack.teardown(c2)
+    c3 = rack.establish(3, 6)      # fiber released, works again
+    assert c3.via_fiber == 0
+
+
+def test_reconfigure_counts_one_window():
+    rack = LumorphRack(n_servers=1, tiles_per_server=8, trx_banks_per_tile=4)
+    rack.reconfigure([(0, 1), (2, 3), (4, 5)])
+    rack.reconfigure([(1, 0), (3, 2)])
+    assert rack.reconfig_events == 2
+    assert len(rack.live_circuits()) == 2
+
+
+def test_validate_round_degree_limit():
+    rack = LumorphRack(n_servers=1, tiles_per_server=8, trx_banks_per_tile=3)
+    # chip 0 transmitting to 3 partners: OK; to 4: exceeds TRX banks
+    rack.validate_round([(0, 1), (0, 2), (0, 3)])
+    with pytest.raises(CircuitError):
+        rack.validate_round([(0, 1), (0, 2), (0, 3), (0, 4)])
+
+
+def test_no_loopback():
+    rack = LumorphRack(n_servers=1, tiles_per_server=4)
+    with pytest.raises(CircuitError):
+        rack.establish(2, 2)

@@ -1,0 +1,69 @@
+"""Elastic recovery + straggler mitigation."""
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import LumorphAllocator
+from repro.runtime.fault_tolerance import (ElasticJob, StragglerPolicy,
+                                           largest_pow2_leq, recovery_cost_model,
+                                           simulate_failures)
+
+
+def test_pow2():
+    assert [largest_pow2_leq(n) for n in (0, 1, 2, 3, 7, 8, 9, 1000)] == \
+        [0, 1, 2, 2, 4, 8, 8, 512]
+
+
+def test_elastic_full_recovery():
+    alloc = LumorphAllocator(64, tiles_per_server=8)
+    job = ElasticJob(alloc, "train", 16)
+    dead = job.chips[:2]
+    rec = job.on_failure(step=100, failed_chips=dead)
+    assert rec.recovered and rec.reason == "full"
+    assert len(job.chips) == 16
+    assert not set(dead) & set(job.chips)  # dead chips never reused
+
+
+def test_elastic_shrinks_when_rack_tight():
+    alloc = LumorphAllocator(16, tiles_per_server=8)
+    job = ElasticJob(alloc, "train", 16)  # whole rack
+    rec = job.on_failure(step=5, failed_chips=job.chips[:3])
+    assert rec.recovered
+    assert len(job.chips) == 8  # shrunk to largest feasible pow2
+    assert job.dp_width == 8
+
+
+def test_unaffected_job():
+    alloc = LumorphAllocator(32, tiles_per_server=8)
+    job = ElasticJob(alloc, "t", 8)
+    other = [c for c in range(32) if c not in job.chips][:2]
+    rec = job.on_failure(step=1, failed_chips=other)
+    assert rec.reason == "unaffected"
+    assert len(job.chips) == 8
+
+
+def test_straggler_mitigation_bounds_step():
+    pol = StragglerPolicy(straggler_factor=2.0)
+    times = np.array([1.0, 1.1, 0.9, 1.0, 7.0])  # one straggler
+    assert pol.detect(times).tolist() == [False, False, False, False, True]
+    t = pol.mitigated_step_time(times)
+    assert t < 7.0  # beats waiting for the straggler
+    assert t == pytest.approx(2.0 * 1.0 + 1.0)
+
+
+def test_no_straggler_no_penalty():
+    pol = StragglerPolicy()
+    times = np.array([1.0, 1.05, 0.95])
+    assert pol.mitigated_step_time(times) == pytest.approx(1.05)
+
+
+def test_failure_simulation_poisson():
+    ev = simulate_failures(n_steps=1000, n_chips=256, mtbf_steps=10_000, seed=3)
+    n_failures = sum(len(e.chips) for e in ev)
+    assert 5 <= n_failures <= 60  # E≈25.6
+
+
+def test_recovery_cost_scales():
+    small = recovery_cost_model(1e8, dp=16)
+    big = recovery_cost_model(1e10, dp=16)
+    assert big["total_s"] > small["total_s"] * 50

@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mkqkv(key, b, sq, skv, h, kv, d, dt):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dt)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), dt)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), dt)
+    return q, k, v
+
+
+def _ref_bshd(q, k, v, causal, window):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    skv = k.shape[1]
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, skv, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, skv, d)
+    out = ref.reference_attention(qr, kr, vr, causal=causal, window=window)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+ATTN_CASES = [
+    # (b, sq, skv, h, kv, d, causal, window, dtype)
+    (2, 128, 128, 4, 4, 64, True, None, jnp.float32),
+    (1, 256, 256, 8, 2, 64, True, None, jnp.bfloat16),   # GQA 4:1, bf16
+    (2, 100, 100, 4, 1, 32, True, 48, jnp.float32),      # MQA + SWA + ragged
+    (1, 64, 192, 2, 2, 128, False, None, jnp.float32),   # bidirectional/cross
+    (1, 160, 160, 2, 2, 80, True, None, jnp.float32),    # danube head_dim=80
+    (1, 96, 96, 3, 3, 64, True, 17, jnp.bfloat16),       # odd heads + window
+]
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,d,causal,window,dt", ATTN_CASES)
+def test_flash_attention(rng, b, sq, skv, h, kv, d, causal, window, dt):
+    q, k, v = _mkqkv(rng, b, sq, skv, h, kv, d, dt)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    expect = _ref_bshd(q, k, v, causal, window)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - expect.astype(jnp.float32))))
+    assert err < tol, err
+
+
+@pytest.mark.parametrize("shape,dt", [
+    ((4, 37, 512), jnp.float32),
+    ((2, 130, 768), jnp.bfloat16),
+    ((1, 1, 2048), jnp.float32),    # decode row
+    ((512, 64), jnp.float32),       # 2-D input
+])
+def test_rmsnorm(rng, shape, dt):
+    x = jax.random.normal(rng, shape, dt)
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (shape[-1],), jnp.float32) * 0.2
+    out = ops.fused_rmsnorm(x, w)
+    expect = ref.reference_rmsnorm(x, w)
+    tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) -
+                                 expect.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("n", [256, 1000, 65536, 12345])
+def test_quant_roundtrip(rng, n):
+    x = jax.random.normal(rng, (n,), jnp.float32) * 5
+    q, s = ops.quantize_int8(x)
+    qr, sr = ref.reference_quantize_int8(x)
+    assert jnp.array_equal(q[:len(qr)], qr)
+    assert jnp.allclose(s, sr)
+    deq = ops.dequantize_int8(q, s, n)
+    # per-block max error ≤ scale/2 = blockmax/254
+    xf = jnp.pad(x, (0, (-n) % 256)).reshape(-1, 256)
+    bound = (jnp.abs(xf).max(axis=1) / 254 + 1e-6)[:, None]
+    err = jnp.abs(deq - x)
+    errb = jnp.pad(err, (0, (-n) % 256)).reshape(-1, 256)
+    assert bool(jnp.all(errb <= bound + 1e-7))
+
+
+def test_attention_matches_model_path(rng):
+    """cfg.use_pallas=True must agree with the pure-jnp model attention."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, forward_logits
+    cfg = get_smoke_config("h2o-danube-1.8b").replace(compute_dtype="float32")
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+    base, _ = forward_logits(params, {"tokens": toks}, cfg)
+    pal, _ = forward_logits(params, {"tokens": toks}, cfg.replace(use_pallas=True))
+    err = float(jnp.abs(base - pal).max() / (jnp.abs(base).max() + 1e-9))
+    assert err < 1e-4, err

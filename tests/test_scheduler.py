@@ -1,0 +1,108 @@
+"""Circuit schedules: feasibility on the rack + cost-model consistency."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.fabric import LumorphRack
+from repro.core.scheduler import build_schedule, rhd_schedule, ring_schedule, rqq_schedule
+
+
+@pytest.mark.parametrize("algo,p", [("ring", 6), ("ring", 8), ("lumorph2", 8),
+                                    ("lumorph2", 16), ("lumorph4", 16),
+                                    ("lumorph4", 8), ("lumorph4", 32)])
+def test_schedules_validate_on_rack(algo, p):
+    # LUMORPH-4's high-stride rounds open up to 2·(chips/server)·(r−1)
+    # circuits across one server pair — the rack must be provisioned with
+    # enough fibers ("given enough fibers between servers", paper §3).
+    rack = LumorphRack(n_servers=max(1, p // 8), tiles_per_server=8,
+                       trx_banks_per_tile=4, fibers_per_server_pair=64)
+    sched = build_schedule(algo, list(range(p)), 1e6)
+    sched.validate(rack)  # raises on any infeasible round
+
+
+def test_lumorph4_fiber_demand_is_real():
+    """Under-provisioned fibers must be DETECTED (16 chips, radix-4,
+    stride-4 round crosses servers 32×)."""
+    import pytest as _pytest
+    from repro.core.fabric import CircuitError
+    rack = LumorphRack(n_servers=2, tiles_per_server=8,
+                       trx_banks_per_tile=4, fibers_per_server_pair=16)
+    sched = build_schedule("lumorph4", list(range(16)), 1e6)
+    with _pytest.raises(CircuitError):
+        sched.validate(rack)
+
+
+def test_ring_configures_once():
+    s = ring_schedule(list(range(8)), 1e6)
+    assert s.reconfigurations() == 1  # ring never changes partners
+
+
+def test_rhd_reconfigures_every_round_but_one():
+    p = 16
+    s = rhd_schedule(list(range(p)), 1e6)
+    assert len(s.rounds) == 2 * int(math.log2(p))
+    # the last halving round and the first doubling round share distance-1
+    # partners → circuits stay up across the phase boundary
+    assert s.reconfigurations() == len(s.rounds) - 1
+
+
+def test_schedule_cost_matches_cost_model():
+    """The executable schedule, priced round-by-round, must agree with the
+    closed-form α–β formulas (keeps both honest)."""
+    link = cm.LUMORPH_LINK
+    p, n = 16, 8e6
+    for algo, formula in [("ring", cm.ring_all_reduce_cost),
+                          ("lumorph2", cm.rhd_all_reduce_cost),
+                          ("lumorph4", cm.rqq_all_reduce_cost)]:
+        sched = build_schedule(algo, list(range(p)), n)
+        assert sched.cost(link) == pytest.approx(formula(n, p, link), rel=1e-6), algo
+
+
+def test_rhd_falls_back_to_ring_nonpow2():
+    s = build_schedule("lumorph2", list(range(6)), 1e6)
+    assert s.algo == "ring"
+
+
+@given(st.sampled_from([2, 4, 8, 16, 32, 64]), st.floats(1e3, 1e9))
+@settings(max_examples=30, deadline=None)
+def test_rqq_round_structure(p, n):
+    s = rqq_schedule(list(range(p)), n)
+    radices = cm.mixed_radix_factorization(p, 4)
+    assert len(s.rounds) == 2 * len(radices)
+    # every chip participates exactly (r-1) times per round as sender
+    for rnd, r in zip(s.rounds, radices):
+        sends = {}
+        for src, dst in rnd.pairs:
+            sends[src] = sends.get(src, 0) + 1
+            assert src != dst
+        assert set(sends.values()) == {r - 1}
+
+
+def test_noncontiguous_participants():
+    """Tenants own scattered chips (the whole point of LUMORPH) — schedules
+    must work on arbitrary chip id sets."""
+    chips = [3, 7, 12, 21, 38, 40, 55, 63]
+    rack = LumorphRack(n_servers=8, tiles_per_server=8, fibers_per_server_pair=8)
+    for algo in ("ring", "lumorph2", "lumorph4"):
+        sched = build_schedule(algo, chips, 1e6)
+        sched.validate(rack)
+        participants = {c for r in sched.rounds for pair in r.pairs for c in pair}
+        assert participants <= set(chips)
+
+
+def test_locality_ordering_cuts_fiber_demand():
+    """Fiber-aware placement: ordering a scattered tenant's chips
+    server-major reduces LUMORPH-4's peak per-pair fiber demand."""
+    from repro.core.scheduler import fiber_demand, order_for_locality
+    # a scattered 16-chip allocation across 4 servers of 8 tiles
+    chips = [0, 9, 2, 25, 4, 17, 6, 27, 8, 1, 10, 19, 24, 11, 26, 3]
+    bad = rqq_schedule(chips, 1e6)
+    good = rqq_schedule(order_for_locality(chips, 8), 1e6)
+    assert fiber_demand(good, 8) <= fiber_demand(bad, 8)
+    # and with consecutive chips the low-stride rounds are fully intra-server
+    ordered = rqq_schedule(list(range(16)), 1e6)
+    first_round = ordered.rounds[0]  # stride-1: digit groups of 4
+    assert all(s // 8 == d // 8 for s, d in first_round.pairs)

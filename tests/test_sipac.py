@@ -1,0 +1,48 @@
+"""SiPAC(r, ℓ) emulation on LUMORPH (paper Fig 3)."""
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.fabric import LumorphRack
+from repro.core.sipac import (configure_sipac_on_lumorph, emulation_is_exact,
+                              flex_sipco_cost, sipac_edges, sipac_graph)
+
+
+def test_sipac_2_3_is_cube():
+    g = sipac_graph(2, 3)
+    assert g.number_of_nodes() == 8
+    assert g.number_of_edges() == 12  # 3-cube
+    assert all(d == 3 for _, d in g.degree())
+
+
+def test_sipac_3_2_degrees():
+    g = sipac_graph(3, 2)
+    assert g.number_of_nodes() == 9
+    assert all(d == 4 for _, d in g.degree())  # (r−1)·ℓ = 4
+
+
+@pytest.mark.parametrize("r,ell,banks", [(2, 3, 4), (2, 2, 2), (3, 2, 8)])
+def test_lumorph_emulates_sipac(r, ell, banks):
+    """Paper Fig 3: configure circuits to match SiPAC(r,ℓ) exactly."""
+    n = r ** ell
+    import math
+    n_servers = max(1, math.ceil(n / 8))
+    rack = LumorphRack(n_servers=n_servers, tiles_per_server=8,
+                       trx_banks_per_tile=banks, fibers_per_server_pair=64)
+    chips = list(range(n))
+    configure_sipac_on_lumorph(rack, chips, r, ell)
+    assert emulation_is_exact(rack, chips, r, ell)
+    assert rack.reconfig_events == 1  # one MZI window for the whole topology
+
+
+def test_flex_sipco_cost_is_mixed_radix():
+    link = cm.LUMORPH_LINK
+    assert flex_sipco_cost(1e6, 2, 3, link) == \
+        pytest.approx(cm.rqq_all_reduce_cost(1e6, 8, link, radix=2))
+
+
+def test_edges_differ_one_digit():
+    for a, b in sipac_edges(3, 2):
+        da = (a % 3, a // 3)
+        db = (b % 3, b // 3)
+        assert sum(x != y for x, y in zip(da, db)) == 1

@@ -1,0 +1,81 @@
+"""System-level behaviour: the paper's three claims, end to end in software.
+
+1. fragmentation-free multi-tenancy (allocator vs torus/SiPAC),
+2. faster collectives (cost model + executable schedule agreement),
+3. training-throughput gain (Fig 4a machinery: bucket trace × cost model).
+"""
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.allocator import LumorphAllocator, TorusAllocator
+from repro.core.scheduler import build_schedule
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.optim.grad_comm import make_buckets
+
+import jax
+
+
+def test_claim1_multitenancy_acceptance():
+    """Random tenant churn: LUMORPH accepts strictly more than the torus."""
+    import numpy as np
+    rng = np.random.RandomState(0)
+    lum = LumorphAllocator(64, tiles_per_server=8)
+    tor = TorusAllocator((4, 4, 4))
+    accepted = {"lum": 0, "tor": 0}
+    live_l, live_t = [], []
+    for i in range(200):
+        k = int(rng.choice([1, 2, 3, 4, 6, 8, 12, 16]))
+        for name, alloc, live in (("lum", lum, live_l), ("tor", tor, live_t)):
+            if rng.rand() < 0.35 and live:
+                alloc.release(live.pop(rng.randint(len(live))))
+            try:
+                alloc.allocate(f"t{i}", k)
+                live.append(f"t{i}")
+                accepted[name] += 1
+            except Exception:
+                pass
+    assert accepted["lum"] > accepted["tor"]
+
+
+def test_claim2_collective_speedup_74pct():
+    """Headline (§4 / Fig 4b): rack-scale (256 GPU) collectives ≥74% faster
+    than the best ideal-switch baseline.  The regime where both Ring (α-
+    linear) and Tree (β×full-buffer) are weak is the MB-scale mid range —
+    exactly where DP gradient buckets live."""
+    p = 256
+    for size in (4 << 20, 8 << 20):
+        baseline = min(cm.algorithm_cost(a, size, p, cm.IDEAL_SWITCH)
+                       for a in ("ring", "tree"))
+        ours = min(cm.algorithm_cost(a, size, p, cm.LUMORPH_LINK)
+                   for a in ("lumorph2", "lumorph4"))
+        assert 1 - ours / baseline >= 0.74, f"size={size}"
+    # and at tiny buffers LUMORPH still beats *Ring* (the α-linear baseline)
+    small = 64 * 1024
+    assert cm.algorithm_cost("lumorph4", small, p, cm.LUMORPH_LINK) < \
+        0.26 * cm.algorithm_cost("ring", small, p, cm.IDEAL_SWITCH)
+
+
+def test_claim3_training_speedup():
+    """Fig 4a machinery: BERT-large DP gradient stream, flat 4MB buckets,
+    LUMORPH vs ideal-switch Ring → comm speedup well above the paper's
+    1.7× end-to-end (end-to-end includes compute, so comm must exceed it)."""
+    cfg = get_config("bert-large")
+    total = sum(l.size for l in jax.tree.leaves(tf.param_shapes(cfg)))
+    buckets = make_buckets(total, bucket_bytes=4 * 1024 * 1024)
+    p = 256
+    t_ring = sum(cm.algorithm_cost("ring", 4 * b.n_elems, p, cm.IDEAL_SWITCH)
+                 for b in buckets)
+    t_lum = sum(min(cm.algorithm_cost(a, 4 * b.n_elems, p, cm.LUMORPH_LINK)
+                    for a in ("lumorph2", "lumorph4")) for b in buckets)
+    assert t_ring / t_lum > 1.7
+
+
+def test_schedule_and_formula_never_disagree():
+    link = cm.LUMORPH_LINK
+    for p in (4, 8, 16, 64):
+        for algo in ("ring", "lumorph2", "lumorph4"):
+            s = build_schedule(algo, list(range(p)), 1e7)
+            f = cm.algorithm_cost(algo, 1e7, p, link)
+            assert s.cost(link) == pytest.approx(f, rel=1e-6), (algo, p)
