@@ -22,12 +22,13 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys, json, time
 sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp, numpy as np
+from repro import compat
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.collectives import make_all_reduce
 from repro.core.scheduler import build_schedule
 
 p = 8
-mesh = jax.make_mesh((p,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((p,), ("d",))
 rng = np.random.RandomState(0)
 x = rng.randn(p, 1 << 16).astype(np.float32)
 expect = x.sum(0)

@@ -5,23 +5,35 @@ CSV rows for:
   * fig4b_collectives      — ALLREDUCE runtime vs buffer size (paper Fig 4b)
   * fig4a_training         — BERT training throughput LUMORPH vs Ring (Fig 4a)
   * fig2a_fragmentation    — multi-tenant acceptance/utilization (Fig 2a)
+  * sim_rack               — event-driven multi-tenant rack simulation
   * bench_kernels          — Pallas kernels vs oracles
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
+
+``python -m benchmarks.run NAME`` runs just one module; an unknown NAME is
+an error listing the valid ones.
 """
 
 import sys
 
 
-def main() -> None:
+def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives)
-    modules = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-               bench_kernels, bench_collective_exec]
+                            fig4b_collectives, sim_rack)
+    mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
+            sim_rack, bench_kernels, bench_collective_exec]
+    return {m.__name__.split(".")[-1]: m for m in mods}
+
+
+def main() -> None:
+    modules = _modules()
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only is not None and only not in modules:
+        print(f"error: unknown benchmark {only!r}; valid names are:\n  "
+              + "\n  ".join(modules), file=sys.stderr)
+        raise SystemExit(2)
     header_printed = False
-    for m in modules:
-        name = m.__name__.split(".")[-1]
+    for name, m in modules.items():
         if only and only != name:
             continue
         lines = m.run()

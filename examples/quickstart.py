@@ -15,6 +15,8 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -54,8 +56,7 @@ def main():
           f"{ring*1e6:.1f}µs → {1 - ours/ring:.0%} faster")
 
     # -- 4. executable collectives --------------------------------------------
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",))
     x = np.random.RandomState(0).randn(8, 1000).astype(np.float32)
     xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data", None)))
     for algo in ("ring", "lumorph2", "lumorph4"):

@@ -1,0 +1,68 @@
+"""jax version compatibility helpers.
+
+The repo targets recent jax (≥ 0.5 APIs like explicit ``axis_types`` on
+meshes and the two-argument ``AbstractMesh``), but must also run on the
+0.4.3x line shipped in some accelerator images.  Everything that differs
+between the two lines goes through here.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on jax ≥ 0.5, ``None`` (meaning: do not pass
+    the kwarg) on older jax where every mesh axis is implicitly auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kw) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with auto axis types where the kwarg exists."""
+    types = auto_axis_types(len(axis_names))
+    if types is not None:
+        kw.setdefault("axis_types", types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (≥ 0.5); on 0.4.x ``psum(1, axis)`` folds to the
+    same static int inside shard_map bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` (≥ 0.5) or ``jax.experimental.shard_map`` (0.4.x).
+
+    The old entry point has no ``axis_names`` (they come from the mesh) and
+    spells replication checking ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    # the old entry point spells "manual over axis_names only" as the
+    # complement: auto = every mesh axis NOT named (else e.g. the model
+    # axis would silently turn manual and TP-through-auto would be lost)
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, auto=auto)
+
+
+def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``AbstractMesh`` across the 0.4/0.5 constructor change (new jax takes
+    ``(shapes, names)``; 0.4.x takes one ``((name, size), ...)`` tuple)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.cost_model import mixed_radix_factorization
 
 Array = jax.Array
@@ -53,7 +54,7 @@ def _unflatten(flat: Array, n: int, shape) -> Array:
 
 
 def _axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +227,7 @@ def all_reduce(x: Array, axis_name: str, algo: str = "lumorph2") -> Array:
     Paper §3 dispatch rule: power-of-two allocations use recursive
     doubling/halving (or quartering); anything else uses Ring.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if algo in ("lumorph2",) and p & (p - 1):
         algo = "ring"
     try:
@@ -244,7 +245,7 @@ def make_all_reduce(mesh: Mesh, axis_name: str, algo: str = "lumorph2",
     (one slice per chip); output is identically sharded, every slice holding
     the sum.  Used by tests and the gradient-communication layer.
     """
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda v: all_reduce(v[0], axis_name, algo)[None],
         mesh=mesh,
         in_specs=P(axis_name),

@@ -28,6 +28,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core import collectives
 from repro.core.cost_model import LUMORPH_LINK, LinkModel, select_algorithm
 
@@ -94,7 +96,7 @@ def compressed_all_reduce(x: Array, axis_name: str) -> Array:
     1/64 overhead), the receiver dequant-accumulates in fp32.  Wire bytes
     ≈ n (int8) + n/64 (scales) vs 4n fp32: ~3.8× β reduction.
     """
-    p = jax.lax.axis_size(axis_name)
+    p = compat.axis_size(axis_name)
     if p == 1:
         return x
     if p & (p - 1):
@@ -188,7 +190,7 @@ def all_reduce_grads(grads: PyTree, axis_names: tuple[str, ...],
     buckets = make_buckets(flat.size, bucket_bytes)
 
     axis = axis_names if len(axis_names) > 1 else axis_names[0]
-    p_total = jax.lax.axis_size(axis)
+    p_total = compat.axis_size(axis)
 
     log: list[tuple[int, str]] = []
     reduced_parts = []

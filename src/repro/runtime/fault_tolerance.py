@@ -50,6 +50,20 @@ def largest_pow2_leq(n: int) -> int:
     return 1 << (n.bit_length() - 1) if n > 0 else 0
 
 
+def reallocate_after_failure(allocator, tenant: str, requested: int):
+    """Shrinking re-allocation policy shared by ElasticJob and the rack
+    simulator: try the full request, then fall back through powers of two
+    (keeping LUMORPH-2/4 on their optimal path).  Returns the new
+    ``Allocation`` or ``None`` when the rack is exhausted."""
+    want = requested
+    while want >= 1:
+        try:
+            return allocator.allocate(tenant, want)
+        except AllocationError:
+            want = largest_pow2_leq(want - 1) if want > 1 else 0
+    return None
+
+
 class ElasticJob:
     """One tenant's training job on a LUMORPH rack, with failure recovery."""
 
@@ -77,18 +91,15 @@ class ElasticJob:
             return rec
         old = self.chips
         self.allocator.fail_chips(list(dead))  # releases survivors to the pool
-        want = self.requested
-        while want >= 1:
-            try:
-                alloc = self.allocator.allocate(self.tenant, want)
-                self.chips = alloc.chips
-                rec = RecoveryRecord(step, tuple(dead), old, self.chips,
-                                     self.dp_width, True,
-                                     "full" if want == self.requested else f"shrunk to {want}")
-                self.history.append(rec)
-                return rec
-            except AllocationError:
-                want = largest_pow2_leq(want - 1) if want > 1 else 0
+        alloc = reallocate_after_failure(self.allocator, self.tenant, self.requested)
+        if alloc is not None:
+            self.chips = alloc.chips
+            got = len(alloc.chips)
+            rec = RecoveryRecord(step, tuple(dead), old, self.chips,
+                                 self.dp_width, True,
+                                 "full" if got >= self.requested else f"shrunk to {got}")
+            self.history.append(rec)
+            return rec
         rec = RecoveryRecord(step, tuple(dead), old, None, 0, False, "rack exhausted")
         self.history.append(rec)
         return rec

@@ -70,6 +70,12 @@ class ShardingPolicy:
     def dp(self) -> int:
         return _size(self.mesh, self.axes.data)
 
+    @property
+    def dp_entry(self):
+        """Data axes as a canonical PartitionSpec entry: bare name when
+        single (jax 0.4.x does not canonicalize 1-tuples), tuple otherwise."""
+        return self.axes.data if len(self.axes.data) > 1 else self.axes.data[0]
+
     def _dp_dim(self, shape: tuple[int, ...], taken: set[int]) -> Optional[int]:
         """Largest dim divisible by dp and not already sharded."""
         best = None
@@ -103,7 +109,7 @@ class ShardingPolicy:
                 taken = {i for i, d in enumerate(out) if d is not None}
                 i = self._dp_dim(shape, taken)
                 if i is not None:
-                    out[i] = self.axes.data
+                    out[i] = self.dp_entry
             return P(*out)
 
         heads_div = cfg.n_heads % tp == 0
@@ -188,7 +194,7 @@ class ShardingPolicy:
         taken = {i for i, d in enumerate(dims) if d is not None}
         i = self._dp_dim(shape, taken)
         if i is not None:
-            dims[i] = self.axes.data if len(self.axes.data) > 1 else self.axes.data[0]
+            dims[i] = self.dp_entry
         return P(*dims)
 
     def opt_specs(self, shapes: PyTree) -> PyTree:
@@ -198,7 +204,7 @@ class ShardingPolicy:
     def batch_spec(self, name: str, shape: tuple[int, ...]) -> P:
         if self.replicate_batch:
             return P(*([None] * len(shape)))
-        dp = self.axes.data
+        dp = self.dp_entry
         b = shape[0] if shape else 0
         if b and b % self.dp == 0:
             return P(dp, *([None] * (len(shape) - 1)))
@@ -213,7 +219,7 @@ class ShardingPolicy:
         divisible; long-context (batch=1) KV shards the sequence dim over
         data instead."""
         cfg, tp, model = self.cfg, self.tp, self.axes.model
-        dp = self.axes.data
+        dp = self.dp_entry
         dims: list = [None] * len(shape)
         b = shape[0]
         if b % self.dp == 0:
@@ -269,7 +275,7 @@ def spec_noff(shape, dims, policy: ShardingPolicy) -> P:
         taken = {i for i, d in enumerate(out) if d is not None}
         i = policy._dp_dim(shape, taken)
         if i is not None:
-            out[i] = policy.axes.data
+            out[i] = policy.dp_entry
     return P(*out)
 
 

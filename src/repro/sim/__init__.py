@@ -1,0 +1,29 @@
+"""Event-driven multi-tenant rack simulator (`repro.sim`).
+
+Composes the allocator (`repro.core.allocator`), the α–β collective cost
+model (`repro.core.cost_model`), and the elastic-recovery policy
+(`repro.runtime.fault_tolerance`) into a rack that evolves over time:
+tenants arrive, train in compute→collective→reconfigure phases, depart,
+and occasionally lose chips to failures.
+
+Layers:
+  * :mod:`repro.sim.workload` — job/failure traces: synthetic generators
+    (Poisson arrivals, heavy-tailed sizes, the paper's Fig 2a mix) and a
+    replayable JSONL trace format.
+  * :mod:`repro.sim.engine` — the discrete-event loop plus the three
+    fabric *disciplines* (LUMORPH / torus / SiPAC) it compares.
+  * :mod:`repro.sim.metrics` — acceptance, utilization, fragmentation,
+    collective latency (MZI reconfiguration included), and per-tenant JCT.
+"""
+
+from repro.sim.engine import (Discipline, RackSimulator, compare,
+                              make_discipline, simulate)
+from repro.sim.metrics import SimMetrics, TenantRecord
+from repro.sim.workload import (FailureSpec, JobSpec, Trace, fig2a_trace,
+                                poisson_trace)
+
+__all__ = [
+    "Discipline", "RackSimulator", "compare", "make_discipline", "simulate",
+    "SimMetrics", "TenantRecord",
+    "FailureSpec", "JobSpec", "Trace", "fig2a_trace", "poisson_trace",
+]

@@ -1,0 +1,139 @@
+"""Metrics accumulated by the rack simulator.
+
+Everything is either an event counter or a *time integral* (utilization,
+chip-seconds) advanced by the engine on every event, so metrics are exact
+for the discrete-event semantics — no sampling error — and identical
+runs produce bit-identical summaries (the determinism tests rely on it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class TenantRecord:
+    """Per-tenant outcome; one per *accepted* job."""
+
+    tenant: str
+    requested: int
+    arrival: float
+    granted: int  # chips actually held (torus may overallocate)
+    completed: bool = False
+    evicted: bool = False  # lost chips and the rack could not re-slice
+    end: Optional[float] = None
+    steps_done: int = 0
+    collective_s: float = 0.0  # total ALLREDUCE time across the job
+    reconfig_windows: int = 0  # MZI reprogramming windows charged
+    shrunk_to: Optional[int] = None  # width after a shrinking recovery
+
+    @property
+    def jct(self) -> Optional[float]:
+        return None if self.end is None else self.end - self.arrival
+
+
+class SimMetrics:
+    """Accumulator; the engine owns the clock and calls :meth:`advance`."""
+
+    def __init__(self, n_chips: int):
+        self.n_chips = n_chips
+        # counters
+        self.events = 0  # events processed by the engine
+        self.arrivals = 0
+        self.accepted = 0
+        self.rejected = 0
+        self.fragmentation_rejects = 0  # rejected although enough chips were free
+        self.completed = 0
+        self.evicted = 0
+        self.failures_injected = 0  # chips killed
+        self.recoveries = 0  # successful post-failure re-allocations
+        self.reconfig_windows = 0
+        # time integrals
+        self.util_integral = 0.0  # ∫ utilization dt
+        self.busy_chip_seconds = 0.0  # ∫ allocated_chips dt
+        self.goodput_chip_seconds = 0.0  # ∫ requested_chips dt (accepted tenants)
+        self.wasted_chip_seconds = 0.0  # ∫ overallocated_chips dt
+        self.collective_s = 0.0
+        self.compute_s = 0.0
+        self.reconfig_s = 0.0
+        self.horizon = 0.0  # last event time
+        # per-tenant
+        self.tenants: dict[str, TenantRecord] = {}
+        self._collective_samples = 0
+
+    # -- integrals -----------------------------------------------------------
+    def advance(self, dt: float, allocated: int, requested: int) -> None:
+        """Advance the clock by ``dt`` with ``allocated`` chips held by
+        tenants that requested ``requested`` chips in total."""
+        if dt <= 0:
+            return
+        self.util_integral += dt * (allocated / self.n_chips if self.n_chips else 0.0)
+        self.busy_chip_seconds += dt * allocated
+        self.goodput_chip_seconds += dt * requested
+        self.wasted_chip_seconds += dt * (allocated - requested)
+
+    # -- phase accounting ----------------------------------------------------
+    def on_collective(self, rec: TenantRecord, seconds: float) -> None:
+        self.collective_s += seconds
+        rec.collective_s += seconds
+        self._collective_samples += 1
+
+    def on_reconfig(self, rec: TenantRecord, seconds: float) -> None:
+        self.reconfig_s += seconds
+        self.reconfig_windows += 1
+        rec.reconfig_windows += 1
+
+    # -- summaries -----------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.arrivals if self.arrivals else 0.0
+
+    @property
+    def mean_utilization(self) -> float:
+        return self.util_integral / self.horizon if self.horizon else 0.0
+
+    @property
+    def mean_collective_us(self) -> float:
+        """Mean per-step ALLREDUCE latency in µs — the Fig 4b-comparable
+        number (MZI reconfiguration already inside the α of each round)."""
+        if not self._collective_samples:
+            return 0.0
+        return 1e6 * self.collective_s / self._collective_samples
+
+    @property
+    def mean_jct(self) -> float:
+        jcts = [r.jct for r in self.tenants.values() if r.jct is not None and r.completed]
+        return sum(jcts) / len(jcts) if jcts else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "n_chips": self.n_chips,
+            "events": self.events,
+            "arrivals": self.arrivals,
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "acceptance_rate": round(self.acceptance_rate, 6),
+            "fragmentation_rejects": self.fragmentation_rejects,
+            "completed": self.completed,
+            "evicted": self.evicted,
+            "failures_injected": self.failures_injected,
+            "recoveries": self.recoveries,
+            "mean_utilization": round(self.mean_utilization, 6),
+            "goodput_chip_seconds": round(self.goodput_chip_seconds, 3),
+            "wasted_chip_seconds": round(self.wasted_chip_seconds, 3),
+            "mean_collective_us": round(self.mean_collective_us, 3),
+            "reconfig_windows": self.reconfig_windows,
+            "reconfig_s": round(self.reconfig_s, 9),
+            "mean_jct_s": round(self.mean_jct, 6),
+            "horizon_s": round(self.horizon, 6),
+        }
+
+    def csv_rows(self, prefix: str) -> list[str]:
+        """``name,us_per_call,derived`` rows in the benchmark harness format."""
+        s = self.summary()
+        keys = ("acceptance_rate", "fragmentation_rejects", "mean_utilization",
+                "goodput_chip_seconds", "wasted_chip_seconds",
+                "mean_collective_us", "reconfig_windows", "mean_jct_s",
+                "completed", "evicted", "recoveries", "events")
+        return [f"{prefix}/{k},,{s[k]}" for k in keys]

@@ -1,0 +1,184 @@
+"""Workloads and traces for the rack simulator.
+
+A *trace* is the full, allocator-independent description of what happens
+to a rack: which tenants arrive when, how big a slice each wants, how
+long each trains, and which chips fail at what times.  The same trace is
+replayed against every allocator discipline so metrics are directly
+comparable (same arrivals, same failures — only the fabric differs).
+
+Traces serialize to JSONL (one event per line) so experiments are
+reproducible and sharable; synthetic generators cover the paper's Fig 2a
+request mix, Poisson arrival processes, and heavy-tailed tenant sizes
+(real cluster traces are dominated by small jobs with a fat tail of
+near-rack-scale ones).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+#: Fig 2a request mix: deliberately awkward sizes (3, 5, 6, 12) that
+#: fragment torus/SiPAC racks, alongside friendly powers of two.
+FIG2A_SIZES = (1, 2, 3, 4, 5, 6, 8, 12, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One tenant's job: arrive, train ``steps`` steps, depart.
+
+    Every step is a compute phase of ``compute_s`` seconds followed by a
+    gradient ALLREDUCE of ``coll_bytes`` bytes priced by the discipline's
+    cost model, so a job's nominal duration is
+    ``steps * (compute_s + collective_time)``.
+    """
+
+    tenant: str
+    arrival: float  # s, absolute simulation time
+    chips: int  # requested slice size
+    steps: int  # training steps before departure
+    compute_s: float = 1.0  # compute time per step
+    coll_bytes: float = float(4 << 20)  # ALLREDUCE bytes per step
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureSpec:
+    """Chips that die (permanently) at ``time``."""
+
+    time: float
+    chips: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    jobs: tuple[JobSpec, ...]
+    failures: tuple[FailureSpec, ...] = ()
+
+    @property
+    def n_events(self) -> int:
+        """External events only (arrivals + failures); the engine generates
+        many more internal phase/departure events per job."""
+        return len(self.jobs) + len(self.failures)
+
+    # -- JSONL (one event per line, replayable) ------------------------------
+    def to_jsonl(self) -> str:
+        lines = []
+        for j in self.jobs:
+            lines.append(json.dumps({"type": "job", **dataclasses.asdict(j)}))
+        for f in self.failures:
+            lines.append(json.dumps({"type": "failure", "time": f.time,
+                                     "chips": list(f.chips)}))
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "Trace":
+        jobs: list[JobSpec] = []
+        failures: list[FailureSpec] = []
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            kind = rec.pop("type")
+            if kind == "job":
+                jobs.append(JobSpec(**rec))
+            elif kind == "failure":
+                failures.append(FailureSpec(rec["time"], tuple(rec["chips"])))
+            else:
+                raise ValueError(f"unknown trace event type {kind!r}")
+        return cls(tuple(jobs), tuple(failures))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+
+    @classmethod
+    def load(cls, path) -> "Trace":
+        with open(path) as f:
+            return cls.from_jsonl(f.read())
+
+
+# ---------------------------------------------------------------------------
+# Size distributions
+# ---------------------------------------------------------------------------
+
+def fig2a_size_sampler(rng: np.random.RandomState) -> int:
+    return int(rng.choice(FIG2A_SIZES))
+
+
+def heavy_tailed_size_sampler(rng: np.random.RandomState, n_chips: int = 64,
+                              sigma: float = 1.2) -> int:
+    """Lognormal tenant sizes: mostly 1–4 chips, occasional near-rack jobs."""
+    k = int(np.ceil(rng.lognormal(mean=0.7, sigma=sigma)))
+    return int(min(max(k, 1), n_chips))
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def poisson_trace(n_jobs: int, *, arrival_rate: float = 0.5,
+                  mean_steps: float = 20.0, compute_s: float = 1.0,
+                  coll_bytes: float = float(64 << 20),
+                  size_sampler: Callable[[np.random.RandomState], int] | None = None,
+                  failure_rate: float = 0.0, n_chips: int = 64,
+                  seed: int = 0) -> Trace:
+    """Poisson arrivals at ``arrival_rate`` jobs/s, geometric-ish step counts,
+    optional Poisson chip failures at ``failure_rate`` failures/s."""
+    rng = np.random.RandomState(seed)
+    sampler = size_sampler or (lambda r: heavy_tailed_size_sampler(r, n_chips))
+    t = 0.0
+    jobs = []
+    for i in range(n_jobs):
+        t += rng.exponential(1.0 / arrival_rate)
+        steps = int(rng.exponential(mean_steps)) + 1
+        jobs.append(JobSpec(tenant=f"t{i}", arrival=round(t, 6),
+                            chips=sampler(rng), steps=steps,
+                            compute_s=compute_s, coll_bytes=coll_bytes))
+    failures = []
+    if failure_rate > 0:
+        horizon = t
+        ft = 0.0
+        while True:
+            ft += rng.exponential(1.0 / failure_rate)
+            if ft >= horizon:
+                break
+            chip = int(rng.randint(n_chips))
+            failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))
+    return Trace(tuple(jobs), tuple(failures))
+
+
+def fig2a_trace(n_events: int = 2000, *, mean_lifetime: float = 60.0,
+                compute_s: float = 6.0, coll_bytes: float = float(4 << 20),
+                seed: int = 0) -> Trace:
+    """The paper's Fig 2a churn: one arrival per unit time, sizes from the
+    mixed request distribution, exponential lifetimes (mean 60 time units).
+
+    ``compute_s`` sets the step granularity: a tenant's lifetime is carved
+    into ``lifetime / compute_s`` compute→collective phases.
+    """
+    rng = np.random.RandomState(seed)
+    jobs = []
+    for t in range(n_events):
+        k = fig2a_size_sampler(rng)
+        lifetime = float(int(rng.exponential(mean_lifetime)) + 1)
+        steps = max(1, int(round(lifetime / compute_s)))
+        jobs.append(JobSpec(tenant=f"t{t}", arrival=float(t), chips=k,
+                            steps=steps, compute_s=compute_s,
+                            coll_bytes=coll_bytes))
+    return Trace(tuple(jobs))
+
+
+def failure_injection_trace(*, n_chips: int = 64, seed: int = 0) -> Trace:
+    """A small deterministic scenario for testing recovery: a rack fills up,
+    then a burst of failures forces re-allocation from survivors."""
+    rng = np.random.RandomState(seed)
+    jobs = [JobSpec(tenant=f"t{i}", arrival=float(i), chips=8, steps=40,
+                    compute_s=1.0) for i in range(6)]
+    dead = tuple(int(c) for c in rng.choice(n_chips, size=6, replace=False))
+    failures = [FailureSpec(time=10.0, chips=dead[:3]),
+                FailureSpec(time=20.0, chips=dead[3:])]
+    return Trace(tuple(jobs), tuple(failures))

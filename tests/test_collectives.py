@@ -7,6 +7,8 @@ import sys
 from pathlib import Path
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -19,11 +21,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, {src!r})
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import compat
 from repro.core.collectives import make_all_reduce
 from repro.optim.grad_comm import compressed_all_reduce
 
 p = 8
-mesh = jax.make_mesh((p,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((p,), ("d",))
 rng = np.random.RandomState(0)
 x = rng.randn(p, 41).astype(np.float32)
 expect = np.tile(x.sum(0, keepdims=True), (p, 1))
@@ -32,7 +35,7 @@ for algo in ("ring", "lumorph2", "lumorph4", "psum"):
     out = np.asarray(make_all_reduce(mesh, "d", algo)(xs))
     assert np.allclose(out, expect, rtol=1e-5, atol=1e-5), algo
 # compressed: lossy but bounded (int8 per-block ~ 1% of block max per hop)
-f = jax.jit(jax.shard_map(lambda v: compressed_all_reduce(v[0], "d")[None],
+f = jax.jit(compat.shard_map(lambda v: compressed_all_reduce(v[0], "d")[None],
             mesh=mesh, in_specs=P("d", None), out_specs=P("d", None),
             axis_names={{"d"}}, check_vma=False))
 out = np.asarray(f(xs))
@@ -54,11 +57,10 @@ def test_collectives_multidevice():
 def test_single_device_identity():
     """p=1: every algorithm must be the identity."""
     from repro.core.collectives import all_reduce
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("d",))
     x = jnp.arange(16.0)
     for algo in ("ring", "lumorph2", "lumorph4", "psum"):
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(compat.shard_map(
             lambda v: all_reduce(v, "d", algo), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(),
             out_specs=jax.sharding.PartitionSpec(),

@@ -1,6 +1,8 @@
 """Optimizer + gradient-communication machinery."""
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -91,7 +93,7 @@ def test_error_feedback_removes_bias():
 
 def test_all_reduce_grads_single_axis_identity():
     """On a 1-device mesh the bucketed LUMORPH allreduce must be exact."""
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     grads = {"a": jnp.arange(8.0), "b": jnp.ones((3, 3))}
 
     def body(g):
@@ -99,10 +101,10 @@ def test_all_reduce_grads_single_axis_identity():
         return out
 
     specs = jax.tree.map(lambda _: jax.sharding.PartitionSpec(), grads)
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
-                              in_specs=(specs,),
-                              out_specs=specs,
-                              axis_names={"data"}, check_vma=False))
+    f = jax.jit(compat.shard_map(body, mesh=mesh,
+                                 in_specs=(specs,),
+                                 out_specs=specs,
+                                 axis_names={"data"}, check_vma=False))
     out = f(grads)
     for k in grads:
         np.testing.assert_allclose(np.asarray(out[k]), np.asarray(grads[k]), rtol=1e-6)
