@@ -10,9 +10,13 @@ CSV rows for:
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
 
 ``python -m benchmarks.run NAME`` runs just one module; an unknown NAME is
-an error listing the valid ones.
+an error listing the valid ones.  ``--json PATH`` additionally writes the
+results machine-readably (one record per CSV row, grouped by benchmark) so
+the perf trajectory can be tracked across PRs (``BENCH_*.json``).
 """
 
+import argparse
+import json
 import sys
 
 
@@ -25,22 +29,62 @@ def _modules():
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 
-def main() -> None:
+def _parse_row(line: str) -> dict:
+    """One ``name,us_per_call,derived`` CSV row → a JSON-ready record."""
+    name, us, derived = line.split(",", 2)
+    rec = {"name": name}
+    if us:
+        try:
+            rec["us_per_call"] = float(us)
+        except ValueError:
+            rec["us_per_call"] = us
+    if derived:
+        rec["derived"] = derived
+    return rec
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument("benchmarks", nargs="*", metavar="NAME",
+                        help="benchmark module(s) to run (default: all)")
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write machine-readable results to PATH")
+    args = parser.parse_args(argv)
+
     modules = _modules()
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    if only is not None and only not in modules:
-        print(f"error: unknown benchmark {only!r}; valid names are:\n  "
+    unknown = [n for n in args.benchmarks if n not in modules]
+    if unknown:
+        print(f"error: unknown benchmark(s) {unknown}; valid names are:\n  "
               + "\n  ".join(modules), file=sys.stderr)
         raise SystemExit(2)
+    selected = args.benchmarks or list(modules)
+
+    results: dict[str, list[dict]] = {}
     header_printed = False
     for name, m in modules.items():
-        if only and only != name:
+        if name not in selected:
             continue
         lines = m.run()
         start = 0 if not header_printed else 1  # one CSV header total
         for line in lines[start:]:
             print(line, flush=True)
+        results[name] = [_parse_row(line) for line in lines[1:]]
         header_printed = True
+
+    if args.json:
+        payload = {
+            "schema": 1,
+            "benchmarks": [
+                {"benchmark": name, "rows": rows}
+                for name, rows in results.items()
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -1,11 +1,18 @@
 """LUMORPH core: the paper's contribution as a composable JAX library.
 
-  * ``cost_model``   -- alpha-beta pricing of collectives incl. MZI reconfiguration
+  * ``scheduler``    -- the Schedule IR: one builder per algorithm lowers
+                        (chips, bytes) to validated per-round circuit
+                        schedules -- the single source of truth that
+                        execution, pricing, and simulation derive from
+  * ``cost_model``   -- alpha-beta pricing of collectives incl. MZI
+                        reconfiguration; ``algorithm_cost`` delegates to
+                        ``Schedule.cost`` (closed forms = cross-checks)
   * ``fabric``       -- LIGHTPATH photonic fabric + LUMORPH rack resource model
-  * ``scheduler``    -- collective -> per-round circuit schedules (validated)
   * ``allocator``    -- fragmentation-free multi-tenant allocation + baselines
   * ``sipac``        -- SiPAC(r, l) emulation (paper Fig 3)
-  * ``collectives``  -- executable shard_map ALLREDUCE (ring / LUMORPH-2 / -4)
+  * ``collectives``  -- ``compile_schedule``: Schedule -> shard_map/ppermute
+                        ALLREDUCE (ring / LUMORPH-2 / -4 / tree), optional
+                        per-hop payload transforms (int8 compression)
 """
 
 from repro.core import allocator, collectives, cost_model, fabric, scheduler, sipac  # noqa: F401

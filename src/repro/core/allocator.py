@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Optional, Sequence
+from typing import Sequence
 
 
 @dataclasses.dataclass
@@ -191,7 +191,6 @@ def make_allocator(kind: str, n_chips: int, **kw) -> BaseAllocator:
     if kind == "lumorph":
         return LumorphAllocator(n_chips, **kw)
     if kind == "torus":
-        side = round(n_chips ** (1 / 3))
         dims = kw.pop("dims", None)
         if dims is None:
             # factor n_chips into 3 near-equal pow-2-friendly dims

@@ -1,39 +1,46 @@
-"""Executable LUMORPH collectives as shard_map programs (paper §4).
+"""Executable LUMORPH collectives, compiled from the Schedule IR (paper §4).
 
-Each algorithm is expressed as a sequence of ``jax.lax.ppermute`` rounds —
-the TPU-native analogue of programming MZI circuits: one ppermute's partner
-map *is* the circuit configuration the LUMORPH scheduler would install for
-that round (see ``repro.core.scheduler``; the partner maps match 1:1).
+There are **no hand-written per-algorithm round loops here**: every
+algorithm (ring, LUMORPH-2, LUMORPH-4, tree) is a ``Schedule`` built by
+``repro.core.scheduler`` and lowered by :func:`compile_schedule` into a
+sequence of ``jax.lax.ppermute`` rounds — the TPU-native analogue of
+programming MZI circuits.  A :class:`~repro.core.scheduler.Transfer`'s
+``perm`` *is* the circuit configuration the LUMORPH scheduler would
+install for that hop, so execution, pricing, and simulation all read the
+same object.
 
-All functions here run **inside** ``shard_map`` over a named mesh axis and
-compute a mathematically exact ALLREDUCE (validated against ``lax.psum``):
+All compiled programs run **inside** ``shard_map`` over a named mesh axis
+and compute a mathematically exact ALLREDUCE (validated against
+``lax.psum``).  Rounds are Python-level loops (log p or p−1 iterations)
+so every round has static shapes; the data-dependent part (which chunks
+to ship) gathers per-rank rows of the IR's static chunk tables with the
+traced ``axis_index``.
 
-  * ``ring_all_reduce``     — bandwidth-optimal ring, 2(p−1) rounds
-  * ``rhd_all_reduce``      — LUMORPH-2 recursive halving/doubling, 2·log2 p
-  * ``rqq_all_reduce``      — LUMORPH-4 mixed-radix quartering/quadrupling,
-                              2·log4 p rounds with 3 circuits per chip/round
-  * ``all_reduce``          — dispatch by name, with the paper's fallback
-                              (non-power-of-two → ring)
-
-Rounds are Python-level loops (log p or p−1 iterations) so every round has
-static shapes; the data-dependent part (which chunk to ship) uses traced
-``axis_index`` with dynamic slicing.
+:func:`compile_schedule` also accepts a per-hop **payload transform**
+(``encode``/``decode``) — e.g. int8 quantization with per-block scales
+(see ``repro.optim.grad_comm.compressed_all_reduce``): the transform sees
+every shipped piece, and the IR stays the single source of truth for the
+round structure.
 """
 
 from __future__ import annotations
 
 import functools
-import math
-from typing import Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.cost_model import mixed_radix_factorization
+from repro.core.scheduler import Schedule, build_schedule
 
 Array = jax.Array
+#: encode(piece) -> payload pytree shipped over the wire
+Encode = Callable[[Array], Any]
+#: decode(payload, like) -> array shaped/typed like ``like``
+Decode = Callable[[Any, Array], Array]
 
 
 # ---------------------------------------------------------------------------
@@ -53,170 +60,90 @@ def _unflatten(flat: Array, n: int, shape) -> Array:
     return flat[:n].reshape(shape)
 
 
-def _axis_size(axis_name: str) -> int:
-    return compat.axis_size(axis_name)
-
-
 # ---------------------------------------------------------------------------
-# Ring (paper §3 baseline + non-power-of-two tenants)
+# the schedule -> shard_map compiler
 # ---------------------------------------------------------------------------
 
-def ring_all_reduce(x: Array, axis_name: str) -> Array:
-    """Classic ring ALLREDUCE: reduce-scatter then all-gather on a ring.
+def compile_schedule(schedule: Schedule, axis_name: str,
+                     encode: Optional[Encode] = None,
+                     decode: Optional[Decode] = None) -> Callable[[Array], Array]:
+    """Lower a :class:`Schedule` to an ALLREDUCE running over ``axis_name``.
 
-    The ring is configured once (one MZI window) and never reconfigured —
-    matching the paper's observation that Ring "wastes" LUMORPH's switching
-    but is β-optimal for any p.
+    The returned function must be called inside ``shard_map``; rank ``i``
+    of the mesh axis plays ``schedule.participants[i]``.  Each
+    :class:`Transfer` becomes one ``ppermute``: ranks gather their row of
+    the transfer's chunk tables (static arrays indexed by the traced
+    ``axis_index``), ship those chunks, and either accumulate or overwrite
+    the received ones.  ``encode``/``decode`` wrap every hop's payload
+    (quantization, dtype casts, …); ``decode`` receives the original piece
+    as its shape/dtype witness.
     """
-    p = _axis_size(axis_name)
-    if p == 1:
-        return x
-    idx = jax.lax.axis_index(axis_name)
-    shape = x.shape
-    flat, n = _flatten_pad(x, p)
-    chunk = flat.shape[0] // p
-    buf = flat.reshape(p, chunk)
-    fwd = [(i, (i + 1) % p) for i in range(p)]
+    p = len(schedule.participants)
+    rounds = schedule.rounds
+    n_chunks = schedule.n_chunks
 
-    # reduce-scatter: in round t chip i sends chunk (i - t) mod p and
-    # accumulates the incoming piece into chunk (i - t - 1) mod p.
-    for t in range(p - 1):
-        s = (idx - t) % p
-        r = (idx - t - 1) % p
-        piece = jax.lax.dynamic_index_in_dim(buf, s, axis=0, keepdims=False)
-        got = jax.lax.ppermute(piece, axis_name, fwd)
-        buf = buf.at[r].add(got)
-    # chip i now owns the fully-reduced chunk (i + 1) mod p
-    # all-gather: forward the owned chunk around the ring p-1 times
-    for t in range(p - 1):
-        s = (idx + 1 - t) % p
-        piece = jax.lax.dynamic_index_in_dim(buf, s, axis=0, keepdims=False)
-        got = jax.lax.ppermute(piece, axis_name, fwd)
-        d = (idx - t) % p
-        buf = buf.at[d].set(got)
-    return _unflatten(buf.reshape(-1), n, shape)
+    def fn(x: Array) -> Array:
+        axis = compat.axis_size(axis_name)
+        if axis != p:
+            raise ValueError(
+                f"schedule has {p} participants but axis {axis_name!r} is "
+                f"{axis}-wide — a mismatched perm would silently drop ranks")
+        if p == 1 or not rounds:
+            return x
+        idx = jax.lax.axis_index(axis_name)
+        shape = x.shape
+        flat, n = _flatten_pad(x, n_chunks)
+        buf = flat.reshape(n_chunks, flat.shape[0] // n_chunks)
+        for rnd in rounds:
+            for t in rnd.transfers:
+                send_ids = jnp.asarray(t.send)[idx]
+                recv_ids = jnp.asarray(t.recv)[idx]
+                piece = jnp.take(buf, send_ids, axis=0)
+                payload = encode(piece) if encode is not None else piece
+                got = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, axis_name, t.perm), payload)
+                if decode is not None:
+                    got = decode(got, piece)
+                if t.reduce:
+                    # non-destinations receive zeros: accumulating is a no-op
+                    buf = buf.at[recv_ids].add(got)
+                else:
+                    # overwrite only on actual destinations; ppermute hands
+                    # everyone else zeros that must not clobber their chunks
+                    is_dst = np.zeros((p,), dtype=bool)
+                    for _, d in t.perm:
+                        is_dst[d] = True
+                    buf = jnp.where(jnp.asarray(is_dst)[idx],
+                                    buf.at[recv_ids].set(got), buf)
+        return _unflatten(buf.reshape(-1), n, shape)
 
-
-# ---------------------------------------------------------------------------
-# LUMORPH-2: recursive halving / doubling (radix 2)
-# ---------------------------------------------------------------------------
-
-def rhd_all_reduce(x: Array, axis_name: str) -> Array:
-    """Recursive halving reduce-scatter + recursive doubling all-gather.
-
-    Every round partners via XOR distance — a fresh circuit per round, i.e.
-    one MZI reconfiguration per round on LUMORPH (priced in the cost model).
-    Requires p = 2^k (the paper falls back to Ring otherwise; ``all_reduce``
-    implements that dispatch).
-    """
-    p = _axis_size(axis_name)
-    if p == 1:
-        return x
-    if p & (p - 1):
-        raise ValueError(f"rhd_all_reduce needs a power-of-two axis, got {p}")
-    idx = jax.lax.axis_index(axis_name)
-    shape = x.shape
-    flat, n = _flatten_pad(x, p)
-
-    steps = int(math.log2(p))
-    buf = flat
-    dist = p // 2
-    for _ in range(steps):
-        half = buf.shape[0] // 2
-        perm = [(i, i ^ dist) for i in range(p)]
-        bit = (idx // dist) % 2  # 0 → keep low half, 1 → keep high half
-        lo, hi = buf[:half], buf[half:]
-        send = jnp.where(bit == 0, hi, lo)  # ship the half the partner keeps
-        got = jax.lax.ppermute(send, axis_name, perm)
-        keep = jnp.where(bit == 0, lo, hi)
-        buf = keep + got
-        dist //= 2
-    # buf now holds this chip's reduced shard; recursive doubling all-gather
-    dist = 1
-    for _ in range(steps):
-        perm = [(i, i ^ dist) for i in range(p)]
-        got = jax.lax.ppermute(buf, axis_name, perm)
-        bit = (idx // dist) % 2
-        buf = jnp.where(bit == 0,
-                        jnp.concatenate([buf, got]),
-                        jnp.concatenate([got, buf]))
-        dist *= 2
-    return _unflatten(buf, n, shape)
+    return fn
 
 
-# ---------------------------------------------------------------------------
-# LUMORPH-4: mixed-radix quartering / quadrupling
-# ---------------------------------------------------------------------------
-
-def rqq_all_reduce(x: Array, axis_name: str, radix: int = 4) -> Array:
-    """Radix-r reduce-scatter/all-gather: each round a chip opens r−1
-    simultaneous circuits (paper: egress bandwidth split across partners)
-    and the group shrinks r-fold → log_r(p) rounds per phase.
-
-    Mixed-radix factorization handles p that is not a power of ``radix``
-    (e.g. p=32 → rounds of radix [4, 4, 2]).
-    """
-    p = _axis_size(axis_name)
-    if p == 1:
-        return x
-    idx = jax.lax.axis_index(axis_name)
-    shape = x.shape
-    radices = mixed_radix_factorization(p, radix)
-    lcm = 1
-    for r in radices:
-        lcm *= r  # == p
-    flat, n = _flatten_pad(x, lcm)
-
-    buf = flat
-    phases: list[tuple[int, int]] = []  # (radix, stride)
-    stride = 1
-    # ---- reduce-scatter ----
-    for r in radices:
-        seg = buf.shape[0] // r
-        parts = buf.reshape(r, seg)
-        digit = (idx // stride) % r
-        mine = jax.lax.dynamic_index_in_dim(parts, digit, axis=0, keepdims=False)
-        for off in range(1, r):
-            # circuit: i → partner whose digit is digit_i + off (mod r)
-            perm = []
-            for i in range(p):
-                di = (i // stride) % r
-                j = i + (((di + off) % r) - di) * stride
-                perm.append((i, j))
-            send = jax.lax.dynamic_index_in_dim(
-                parts, (digit + off) % r, axis=0, keepdims=False)
-            got = jax.lax.ppermute(send, axis_name, perm)
-            mine = mine + got
-        buf = mine
-        phases.append((r, stride))
-        stride *= r
-    # ---- all-gather (mirror) ----
-    for r, st in reversed(phases):
-        seg = buf.shape[0]
-        out = jnp.zeros((r, seg), buf.dtype)
-        digit = (idx // st) % r
-        out = jax.lax.dynamic_update_index_in_dim(out, buf, digit, axis=0)
-        for off in range(1, r):
-            perm = []
-            for i in range(p):
-                di = (i // st) % r
-                j = i + (((di + off) % r) - di) * st
-                perm.append((i, j))
-            got = jax.lax.ppermute(buf, axis_name, perm)
-            src_digit = (digit - off) % r
-            out = jax.lax.dynamic_update_index_in_dim(out, got, src_digit, axis=0)
-        buf = out.reshape(-1)
-    return _unflatten(buf, n, shape)
+@functools.lru_cache(maxsize=256)
+def schedule_for_execution(algo: str, p: int) -> Schedule:
+    """The canonical rank-space schedule for executing ``algo`` over ``p``
+    devices (participants 0..p−1; byte metadata irrelevant to execution)."""
+    return build_schedule(algo, tuple(range(p)), 0.0)
 
 
 # ---------------------------------------------------------------------------
 # dispatch
 # ---------------------------------------------------------------------------
 
+def _compiled(algo: str):
+    def run(x: Array, axis_name: str) -> Array:
+        p = compat.axis_size(axis_name)
+        return compile_schedule(schedule_for_execution(algo, p), axis_name)(x)
+    run.__name__ = f"{algo}_all_reduce"
+    return run
+
+
 ALGOS: dict[str, Callable] = {
-    "ring": ring_all_reduce,
-    "lumorph2": rhd_all_reduce,
-    "lumorph4": rqq_all_reduce,
+    "ring": _compiled("ring"),
+    "lumorph2": _compiled("lumorph2"),
+    "lumorph4": _compiled("lumorph4"),
+    "tree": _compiled("tree"),
     "psum": lambda x, axis_name: jax.lax.psum(x, axis_name),
 }
 
@@ -225,7 +152,9 @@ def all_reduce(x: Array, axis_name: str, algo: str = "lumorph2") -> Array:
     """ALLREDUCE ``x`` over ``axis_name`` with the named LUMORPH algorithm.
 
     Paper §3 dispatch rule: power-of-two allocations use recursive
-    doubling/halving (or quartering); anything else uses Ring.
+    doubling/halving (or quartering); anything else uses Ring.  (The
+    ``lumorph2`` builder applies the same fallback, so dispatch and IR
+    agree by construction.)
     """
     p = compat.axis_size(axis_name)
     if algo in ("lumorph2",) and p & (p - 1):

@@ -18,6 +18,7 @@ reused with TPU v5e ICI constants by the roofline/perf passes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable
 
@@ -82,16 +83,19 @@ def ring_all_reduce_cost(n_bytes: float, p: int, link: LinkModel) -> float:
 
 
 def tree_all_reduce_cost(n_bytes: float, p: int, link: LinkModel) -> float:
-    """Binary-tree reduce + broadcast: 2·log2(p) rounds of the full buffer.
+    """Binomial-tree reduce + broadcast: 2·⌈log2 p⌉ rounds of the full buffer.
 
     NCCL-style two-tree pipelining halves the β term; we model the classic
     single tree that the paper's Fig 4 baseline uses (full buffer per hop).
+    Every tree level talks over a different circuit set, so on a
+    reconfigurable fabric each round pays the MZI window in its α (on the
+    ideal electrical links torus/SiPAC use, ``reconfig`` is 0 and this
+    term vanishes) — matching ``tree_schedule`` priced round-by-round.
     """
     if p <= 1:
         return 0.0
     rounds = 2 * math.ceil(math.log2(p))
-    setup = link.reconfig
-    return setup + rounds * (link.alpha + n_bytes * link.beta)
+    return rounds * (link.round_alpha(True) + n_bytes * link.beta)
 
 
 def rhd_all_reduce_cost(n_bytes: float, p: int, link: LinkModel) -> float:
@@ -208,6 +212,9 @@ def mixed_radix_factorization(p: int, radix: int) -> list[int]:
 # Algorithm registry + selector
 # ---------------------------------------------------------------------------
 
+#: Closed-form α–β formulas.  Since the Schedule-IR refactor these are
+#: **cross-checks only** (property-tested against ``Schedule.cost`` in
+#: ``tests/test_schedule_ir.py``); pricing goes through the IR below.
 ALGORITHMS: dict[str, Callable[[float, int, LinkModel], float]] = {
     "ring": ring_all_reduce_cost,
     "tree": tree_all_reduce_cost,
@@ -216,16 +223,31 @@ ALGORITHMS: dict[str, Callable[[float, int, LinkModel], float]] = {
     "dnc": dnc_greedy_cost,
 }
 
+#: Algorithms whose price comes from the Schedule IR (one builder each in
+#: ``repro.core.scheduler``).  ``dnc`` is a search over schedules, not a
+#: schedule, and keeps its closed form.
+IR_PRICED = ("ring", "tree", "lumorph2", "lumorph4")
+
+
+@functools.lru_cache(maxsize=65536)
+def _ir_cost(algo: str, n_bytes: float, p: int, link: LinkModel) -> float:
+    # deferred import: scheduler builds on this module's LinkModel
+    from repro.core.scheduler import build_schedule
+    return build_schedule(algo, tuple(range(p)), n_bytes).cost(link)
+
 
 def algorithm_cost(algo: str, n_bytes: float, p: int, link: LinkModel) -> float:
-    try:
-        fn = ALGORITHMS[algo]
-    except KeyError:
+    """Price one ALLREDUCE.  Delegates to the Schedule IR — the same
+    rounds that execute and simulate are the rounds priced here."""
+    if algo not in ALGORITHMS:
         raise ValueError(f"unknown collective algorithm {algo!r}; have {sorted(ALGORITHMS)}")
     if algo == "lumorph2" and p & (p - 1):
-        # paper §3: non-powers-of-two use Ring on LUMORPH
-        return ring_all_reduce_cost(n_bytes, p, link)
-    return fn(n_bytes, p, link)
+        # paper §3: non-powers-of-two use Ring on LUMORPH (the rhd builder
+        # applies the same fallback; keep the cache key canonical)
+        algo = "ring"
+    if algo in IR_PRICED:
+        return _ir_cost(algo, float(n_bytes), p, link)
+    return ALGORITHMS[algo](n_bytes, p, link)
 
 
 def select_algorithm(n_bytes: float, p: int, link: LinkModel,

@@ -24,7 +24,6 @@ tiles"), so any free TRX pair can be connected — the fabric is
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Iterable, Optional
 
 from repro.core.cost_model import MZI_RECONFIG_DELAY
@@ -209,11 +208,15 @@ class LumorphRack:
     def live_circuits(self) -> list[Circuit]:
         return list(self._circuits.values())
 
-    def validate_round(self, pairs: list[tuple[int, int]]) -> None:
+    def validate_round(self, pairs: list[tuple[int, int]],
+                       check_fibers: bool = True) -> None:
         """Check a round of simultaneous transfers is realizable (dry check).
 
         Degree limits: per-chip TX/RX count ≤ TRX banks; wavelength budget;
         fiber budget per server pair.  Raises CircuitError with a diagnosis.
+        ``check_fibers=False`` skips the fiber budget, for callers that
+        model fiber shortage as time-sharing (serialized sub-rounds priced
+        by ``Schedule.cost(link, rack=...)``) rather than infeasibility.
         """
         tx = {}
         rx = {}
@@ -235,7 +238,8 @@ class LumorphRack:
         for chip, n in rx.items():
             if n > banks:
                 raise CircuitError(f"chip {chip} needs {n} RX circuits > {banks} TRX banks")
-        for key, n in fibers.items():
-            if n > self.fibers_per_server_pair:
-                raise CircuitError(
-                    f"servers {key} need {n} fibers > {self.fibers_per_server_pair}")
+        if check_fibers:
+            for key, n in fibers.items():
+                if n > self.fibers_per_server_pair:
+                    raise CircuitError(
+                        f"servers {key} need {n} fibers > {self.fibers_per_server_pair}")

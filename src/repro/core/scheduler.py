@@ -1,41 +1,81 @@
-"""Circuit schedules for collectives on LUMORPH (paper §4).
+"""The Schedule IR: circuit schedules for collectives on LUMORPH (paper §4).
 
-Turns an (algorithm, participant set) pair into an explicit per-round list
-of directed transfers, validates every round against the rack's photonic
-resource limits (TRX banks, wavelengths, fibers), counts reconfiguration
-windows, and prices the whole schedule with the α–β model.
+A :class:`Schedule` is the repo's **single source of truth** for a
+collective.  One builder per algorithm lowers ``(participant chips,
+n_bytes)`` into rounds of directed circuit pairs *plus* the chunk-index
+arithmetic each round needs, and the three consumers all derive from it:
 
-The same partner maps drive the *executable* shard_map collectives in
-``repro.core.collectives`` — a round's ``pairs`` list is exactly the
-``perm`` argument of ``jax.lax.ppermute``.
+  * **execution** — ``repro.core.collectives.compile_schedule`` runs the
+    rounds as ``jax.lax.ppermute`` calls inside ``shard_map`` (a round's
+    :class:`Transfer` perms are exactly the ppermute partner maps);
+  * **pricing** — :meth:`Schedule.cost` prices the rounds with the α–β
+    model (``repro.core.cost_model.algorithm_cost`` delegates here; the
+    closed-form formulas survive only as property-test cross-checks);
+  * **simulation** — ``repro.sim.engine`` builds schedules on each
+    tenant's *actual* chips, validates them against the rack's photonic
+    limits, and charges inter-server fiber contention.
+
+Adding an algorithm therefore costs one builder, not three parallel
+implementations.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.core.cost_model import LinkModel, mixed_radix_factorization
 from repro.core.fabric import LumorphRack
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
+class Transfer:
+    """One ppermute inside a round, with its chunk arithmetic.
+
+    The buffer is viewed as ``Schedule.n_chunks`` equal chunks.  Rank ``i``
+    ships the chunks ``send[i]`` to its partner under ``perm`` and applies
+    the incoming chunks at ``recv[i]`` — accumulating when ``reduce`` is
+    set (reduce-scatter phases), overwriting otherwise (all-gather /
+    broadcast phases).  Ranks absent from ``perm``'s destinations receive
+    nothing; their ``recv`` rows are placeholders the compiler masks out.
+    """
+
+    perm: tuple[tuple[int, int], ...]  # (src_rank, dst_rank), partial permutation
+    send: np.ndarray  # int32 (p, k): chunk ids each rank ships
+    recv: np.ndarray  # int32 (p, k): chunk ids each rank updates
+    reduce: bool = True  # True → add incoming, False → overwrite
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class Round:
-    """One communication round: simultaneous directed transfers."""
+    """One communication round: simultaneous directed transfers.
+
+    ``pairs`` (in *chip-id* space) is what the fabric sees — the circuit
+    set to program, validate, and price.  ``transfers`` (in *rank* space)
+    is what the executable compiler consumes; their union maps 1:1 onto
+    ``pairs`` through the schedule's participant list.
+    """
 
     pairs: tuple[tuple[int, int], ...]  # (src_chip, dst_chip)
     bytes_per_circuit: float  # payload each circuit carries this round
     #: circuits sharing one chip's egress this round (bandwidth divisor)
     egress_fanout: int = 1
+    #: execution lowering: one ppermute per entry (rank space)
+    transfers: tuple[Transfer, ...] = ()
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Schedule:
     algo: str
     participants: tuple[int, ...]
     rounds: tuple[Round, ...]
     n_bytes: float  # full ALLREDUCE buffer size
+    #: chunk granularity of the executable lowering (buffer padded to a
+    #: multiple of this; 1 for whole-buffer algorithms like tree)
+    n_chunks: int = 1
 
     def reconfigurations(self) -> int:
         """Rounds whose circuit set differs from the previous round's."""
@@ -48,25 +88,55 @@ class Schedule:
             prev = cur
         return count
 
-    def cost(self, link: LinkModel) -> float:
+    def cost(self, link: LinkModel, rack: Optional[LumorphRack] = None) -> float:
         """Total α–β time: per round, α (+ reconfig if circuits changed) +
-        serialized egress bytes × β."""
+        serialized egress bytes × β.
+
+        With ``rack``, inter-server fiber contention is charged: a round
+        whose peak per-server-pair circuit count exceeds the rack's fiber
+        budget must time-share fibers, stretching its β term by
+        ``ceil(demand / fibers)``.  MZIs for all sub-batches are programmed
+        in one window, so α is not stretched.  Placement quality (see
+        :func:`order_for_locality`) shows up directly in this price.
+        """
         total = 0.0
         prev: frozenset = frozenset()
         for r in self.rounds:
             cur = frozenset(r.pairs)
-            reconf = cur != prev
-            total += link.round_alpha(reconf)
-            total += r.bytes_per_circuit * r.egress_fanout * link.beta
+            total += link.round_alpha(cur != prev)
+            stretch = 1
+            if rack is not None:
+                demand = _round_fiber_demand(r.pairs, rack.tiles_per_server)
+                if demand > rack.fibers_per_server_pair:
+                    stretch = -(-demand // rack.fibers_per_server_pair)
+            total += r.bytes_per_circuit * r.egress_fanout * link.beta * stretch
             prev = cur
         return total
 
-    def validate(self, rack: LumorphRack) -> None:
+    def validate(self, rack: LumorphRack, check_fibers: bool = True) -> None:
+        """Check every round against the rack's photonic limits.
+
+        ``check_fibers=False`` skips the per-server-pair fiber budget —
+        used by callers that model fiber shortage as time-sharing (see
+        :meth:`cost` with ``rack``) instead of infeasibility.
+        """
         for i, r in enumerate(self.rounds):
             try:
-                rack.validate_round(list(r.pairs))
+                rack.validate_round(list(r.pairs), check_fibers=check_fibers)
             except Exception as e:  # re-raise with round context
                 raise type(e)(f"round {i}: {e}") from e
+
+
+def _round_fiber_demand(pairs: Sequence[tuple[int, int]],
+                        tiles_per_server: int) -> int:
+    """Peak circuits any one server pair must carry for this round."""
+    per_pair: dict[tuple[int, int], int] = {}
+    for s, d in pairs:
+        ss, ds = s // tiles_per_server, d // tiles_per_server
+        if ss != ds:
+            key = (min(ss, ds), max(ss, ds))
+            per_pair[key] = per_pair.get(key, 0) + 1
+    return max(per_pair.values()) if per_pair else 0
 
 
 # ---------------------------------------------------------------------------
@@ -74,41 +144,98 @@ class Schedule:
 # ---------------------------------------------------------------------------
 
 def ring_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
-    """Ring ALLREDUCE: 2(p−1) rounds, each chip ships n/p to its successor."""
+    """Ring ALLREDUCE: 2(p−1) rounds, each chip ships n/p to its successor.
+
+    Chunk map (n_chunks = p): reduce-scatter round ``t`` sends chunk
+    ``(i−t) mod p`` and accumulates into ``(i−t−1) mod p``; the all-gather
+    mirrors with overwrites.  The ring circuit set never changes.
+    """
     p = len(chips)
     rounds = []
     if p > 1:
         ring_pairs = tuple((chips[i], chips[(i + 1) % p]) for i in range(p))
+        perm = tuple((i, (i + 1) % p) for i in range(p))
         chunk = n_bytes / p
-        for _ in range(2 * (p - 1)):
-            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk))
-    return Schedule("ring", tuple(chips), tuple(rounds), n_bytes)
+        ranks = np.arange(p, dtype=np.int32)
+        for t in range(p - 1):  # reduce-scatter
+            xfer = Transfer(perm=perm,
+                            send=((ranks - t) % p)[:, None],
+                            recv=((ranks - t - 1) % p)[:, None],
+                            reduce=True)
+            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk,
+                                transfers=(xfer,)))
+        for t in range(p - 1):  # all-gather
+            xfer = Transfer(perm=perm,
+                            send=((ranks + 1 - t) % p)[:, None],
+                            recv=((ranks - t) % p)[:, None],
+                            reduce=False)
+            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk,
+                                transfers=(xfer,)))
+    return Schedule("ring", tuple(chips), tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1))
+
+
+def _chunk_range(start: int, size: int) -> np.ndarray:
+    return np.arange(start, start + size, dtype=np.int32)
 
 
 def rhd_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
-    """LUMORPH-2: recursive halving reduce-scatter + doubling all-gather."""
+    """LUMORPH-2: recursive halving reduce-scatter + doubling all-gather.
+
+    Chunk map (n_chunks = p): every rank tracks a live contiguous chunk
+    region, initially the whole buffer.  A halving round at XOR distance
+    ``d`` splits the region; the rank keeps the half selected by its bit
+    at ``d``, ships the other half, and accumulates the partner's copy of
+    the kept half.  Doubling mirrors: ship the own region, adopt the
+    sibling's.
+    """
     p = len(chips)
     if p & (p - 1):
         return ring_schedule(chips, n_bytes)  # paper §3 fallback
     rounds: list[Round] = []
     steps = int(math.log2(p)) if p > 1 else 0
-    # halving: partner distance p/2, p/4, ..., 1; chunk n/2, n/4, ...
+    regions = [(0, p)] * p  # (start chunk, size) per rank
     chunk = n_bytes / 2
     dist = p // 2
-    for _ in range(steps):
+    for _ in range(steps):  # halving
         pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk))
+        perm = tuple((i, i ^ dist) for i in range(p))
+        send = np.empty((p, regions[0][1] // 2), dtype=np.int32)
+        recv = np.empty_like(send)
+        for i in range(p):
+            start, size = regions[i]
+            half = size // 2
+            if (i // dist) % 2 == 0:  # keep low half, ship high half
+                keep, ship = (start, half), (start + half, half)
+            else:
+                keep, ship = (start + half, half), (start, half)
+            send[i] = _chunk_range(*ship)
+            recv[i] = _chunk_range(*keep)
+            regions[i] = keep
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk,
+                            transfers=(Transfer(perm, send, recv, reduce=True),)))
         chunk /= 2
         dist //= 2
-    # doubling: distance 1, 2, ..., p/2; chunk n/p, 2n/p, ...
     chunk = n_bytes / p
     dist = 1
-    for _ in range(steps):
+    for _ in range(steps):  # doubling
         pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk))
+        perm = tuple((i, i ^ dist) for i in range(p))
+        send = np.empty((p, regions[0][1]), dtype=np.int32)
+        recv = np.empty_like(send)
+        for i in range(p):
+            send[i] = _chunk_range(*regions[i])
+            recv[i] = _chunk_range(*regions[i ^ dist])
+        for i in range(p):  # merge sibling regions
+            start, size = regions[i]
+            sib_start, _ = regions[i ^ dist]
+            regions[i] = (min(start, sib_start), size * 2)
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk,
+                            transfers=(Transfer(perm, send, recv, reduce=False),)))
         chunk *= 2
         dist *= 2
-    return Schedule("lumorph2", tuple(chips), tuple(rounds), n_bytes)
+    return Schedule("lumorph2", tuple(chips), tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1))
 
 
 def rqq_schedule(chips: Sequence[int], n_bytes: float, radix: int = 4) -> Schedule:
@@ -117,49 +244,118 @@ def rqq_schedule(chips: Sequence[int], n_bytes: float, radix: int = 4) -> Schedu
     Mixed-radix generalization handles any p that factors into ≤radix terms.
     Digit groups follow the mixed-radix factorization of p; in a radix-r
     round every chip exchanges distinct sub-chunks with the r−1 other chips
-    in its digit group (egress bandwidth split r−1 ways).
+    in its digit group (egress bandwidth split r−1 ways).  Each round
+    lowers to r−1 transfers — one ppermute per digit offset.
     """
     p = len(chips)
     radices = mixed_radix_factorization(p, radix) if p > 1 else []
     rounds: list[Round] = []
+    regions = [(0, p)] * p
     group = 1  # how many ways the buffer is already scattered
     strides: list[tuple[int, int]] = []  # (radix, stride) per phase for mirroring
     stride = 1
-    for r in radices:
-        # chips whose index differs only in this digit form a group
+    for r in radices:  # ---- reduce-scatter ----
         pairs = []
-        for i in range(p):
-            digit = (i // stride) % r
-            for off in range(1, r):
+        xfers = []
+        sub = regions[0][1] // r
+        for off in range(1, r):
+            perm = []
+            send = np.empty((p, sub), dtype=np.int32)
+            recv = np.empty_like(send)
+            for i in range(p):
+                digit = (i // stride) % r
                 j = i + ((digit + off) % r - digit) * stride
+                perm.append((i, j))
                 pairs.append((chips[i], chips[j]))
+                start, _ = regions[i]
+                # ship the partner's digit block, accumulate into own block
+                send[i] = _chunk_range(start + ((digit + off) % r) * sub, sub)
+                recv[i] = _chunk_range(start + digit * sub, sub)
+            xfers.append(Transfer(tuple(perm), send, recv, reduce=True))
+        for i in range(p):
+            start, _ = regions[i]
+            digit = (i // stride) % r
+            regions[i] = (start + digit * sub, sub)
         chunk = n_bytes / group  # bytes currently owned by each chip
         rounds.append(Round(pairs=tuple(pairs),
                             bytes_per_circuit=chunk / r,
-                            egress_fanout=r - 1))
+                            egress_fanout=r - 1,
+                            transfers=tuple(xfers)))
         strides.append((r, stride))
         stride *= r
         group *= r
-    # all-gather mirrors the reduce-scatter phases in reverse
-    for r, st in reversed(strides):
+    for r, st in reversed(strides):  # ---- all-gather (mirror) ----
         group //= r
         chunk = n_bytes / group
+        sub = regions[0][1]
         pairs = []
-        for i in range(p):
-            digit = (i // st) % r
-            for off in range(1, r):
+        xfers = []
+        for off in range(1, r):
+            perm = []
+            send = np.empty((p, sub), dtype=np.int32)
+            recv = np.empty_like(send)
+            for i in range(p):
+                digit = (i // st) % r
                 j = i + ((digit + off) % r - digit) * st
+                perm.append((i, j))
                 pairs.append((chips[i], chips[j]))
+                start, _ = regions[i]
+                parent = start - digit * sub
+                send[i] = _chunk_range(start, sub)
+                # the arriving block was digit (digit−off) of the parent
+                recv[i] = _chunk_range(parent + ((digit - off) % r) * sub, sub)
+            xfers.append(Transfer(tuple(perm), send, recv, reduce=False))
+        for i in range(p):
+            start, _ = regions[i]
+            digit = (i // st) % r
+            regions[i] = (start - digit * sub, sub * r)
         rounds.append(Round(pairs=tuple(pairs),
                             bytes_per_circuit=chunk / r,
-                            egress_fanout=r - 1))
-    return Schedule(f"lumorph{radix}", tuple(chips), tuple(rounds), n_bytes)
+                            egress_fanout=r - 1,
+                            transfers=tuple(xfers)))
+    return Schedule(f"lumorph{radix}", tuple(chips), tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1))
+
+
+def tree_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
+    """Binomial-tree reduce to rank 0 + broadcast back: 2·⌈log2 p⌉ rounds.
+
+    The fixed-topology baseline of torus/SiPAC disciplines (full buffer per
+    hop, n_chunks = 1).  On a reconfigurable fabric every round's circuit
+    set differs from the previous one, so each round pays the MZI window —
+    the closed form in ``cost_model.tree_all_reduce_cost`` mirrors this.
+    Works for any p (ranks ≥ p simply never appear in a perm).
+    """
+    p = len(chips)
+    rounds: list[Round] = []
+    if p > 1:
+        steps = math.ceil(math.log2(p))
+        zeros = np.zeros((p, 1), dtype=np.int32)
+        levels = []
+        for k in range(steps):
+            senders = [i for i in range(p)
+                       if i % (1 << (k + 1)) == (1 << k)]
+            levels.append((k, tuple(senders)))
+        for k, senders in levels:  # reduce toward rank 0
+            perm = tuple((i, i - (1 << k)) for i in senders)
+            pairs = tuple((chips[i], chips[i - (1 << k)]) for i in senders)
+            rounds.append(Round(pairs=pairs, bytes_per_circuit=n_bytes,
+                                transfers=(Transfer(perm, zeros, zeros,
+                                                    reduce=True),)))
+        for k, senders in reversed(levels):  # broadcast back
+            perm = tuple((i - (1 << k), i) for i in senders)
+            pairs = tuple((chips[i - (1 << k)], chips[i]) for i in senders)
+            rounds.append(Round(pairs=pairs, bytes_per_circuit=n_bytes,
+                                transfers=(Transfer(perm, zeros, zeros,
+                                                    reduce=False),)))
+    return Schedule("tree", tuple(chips), tuple(rounds), n_bytes, n_chunks=1)
 
 
 SCHEDULE_BUILDERS = {
     "ring": ring_schedule,
     "lumorph2": rhd_schedule,
     "lumorph4": rqq_schedule,
+    "tree": tree_schedule,
 }
 
 
@@ -179,14 +375,7 @@ def fiber_demand(schedule: Schedule, tiles_per_server: int) -> int:
     """Peak per-server-pair fiber demand across the schedule's rounds."""
     peak = 0
     for r in schedule.rounds:
-        per_pair: dict[tuple[int, int], int] = {}
-        for s, d in r.pairs:
-            ss, ds = s // tiles_per_server, d // tiles_per_server
-            if ss != ds:
-                key = (min(ss, ds), max(ss, ds))
-                per_pair[key] = per_pair.get(key, 0) + 1
-        if per_pair:
-            peak = max(peak, max(per_pair.values()))
+        peak = max(peak, _round_fiber_demand(r.pairs, tiles_per_server))
     return peak
 
 

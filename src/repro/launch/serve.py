@@ -51,7 +51,7 @@ def main(argv=None) -> dict:
     if cfg.kind == "encdec":
         raise SystemExit("use examples/whisper_serve.py for enc-dec serving")
     mesh = make_host_mesh(data=1, model=jax.device_count())
-    policy = make_policy(cfg, mesh)
+    make_policy(cfg, mesh)  # validates the arch has a serving policy
     rng = jax.random.PRNGKey(args.seed)
     params = tf.init_params(rng, cfg)
     max_len = args.prompt_len + args.gen

@@ -14,7 +14,6 @@ mask.  One code path serves all ten assigned architectures.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax

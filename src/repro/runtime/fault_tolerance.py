@@ -20,7 +20,6 @@ we model the standard backup-step rule (re-dispatch when a shard exceeds
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence
 
 import numpy as np

@@ -28,7 +28,6 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.configs.shapes import ShapeSpec
 
 PyTree = Any
 

@@ -1,6 +1,5 @@
 """Checkpoint: atomic write, latest discovery, retention, elastic restore."""
 
-import json
 from pathlib import Path
 
 import jax

@@ -31,7 +31,7 @@ rng = np.random.RandomState(0)
 x = rng.randn(p, 41).astype(np.float32)
 expect = np.tile(x.sum(0, keepdims=True), (p, 1))
 xs = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("d", None)))
-for algo in ("ring", "lumorph2", "lumorph4", "psum"):
+for algo in ("ring", "lumorph2", "lumorph4", "tree", "psum"):
     out = np.asarray(make_all_reduce(mesh, "d", algo)(xs))
     assert np.allclose(out, expect, rtol=1e-5, atol=1e-5), algo
 # compressed: lossy but bounded (int8 per-block ~ 1% of block max per hop)
@@ -59,7 +59,7 @@ def test_single_device_identity():
     from repro.core.collectives import all_reduce
     mesh = compat.make_mesh((1,), ("d",))
     x = jnp.arange(16.0)
-    for algo in ("ring", "lumorph2", "lumorph4", "psum"):
+    for algo in ("ring", "lumorph2", "lumorph4", "tree", "psum"):
         f = jax.jit(compat.shard_map(
             lambda v: all_reduce(v, "d", algo), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(),

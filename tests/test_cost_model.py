@@ -1,7 +1,5 @@
 """α–β cost model: formula properties + the paper's headline claims."""
 
-import math
-
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -103,15 +103,36 @@ def test_failure_during_final_collective_does_not_add_steps():
     assert m.recoveries == 1
 
 
-def test_collective_latency_matches_cost_model():
-    """The engine prices a tenant's per-step ALLREDUCE exactly like the
-    cost-model selector — per-step latency in the metrics must match."""
-    spec = JobSpec("t0", 0.0, 16, steps=4, coll_bytes=float(1 << 20))
+def test_collective_latency_matches_cost_model_single_server():
+    """A tenant that fits inside one server opens no inter-server circuits,
+    so the engine's IR pricing must equal the topology-blind cost-model
+    selector exactly."""
+    spec = JobSpec("t0", 0.0, 8, steps=4, coll_bytes=float(1 << 20))
     m = simulate("lumorph", Trace((spec,)), n_chips=64)
     per_step = m.tenants["t0"].collective_s / m.tenants["t0"].steps_done
-    expect = min(cm.algorithm_cost(a, float(1 << 20), 16, cm.LUMORPH_LINK)
+    expect = min(cm.algorithm_cost(a, float(1 << 20), 8, cm.LUMORPH_LINK)
                  for a in ("ring", "lumorph2", "lumorph4"))
     assert per_step == pytest.approx(expect, rel=1e-9)
+
+
+def test_collective_latency_is_ir_priced_on_actual_chips():
+    """A multi-server tenant is priced from schedules built on its *actual*
+    chip set — locality-ordered, TRX-validated, fiber contention charged —
+    not from the topology-blind closed forms."""
+    from repro.core.scheduler import build_schedule, order_for_locality
+    spec = JobSpec("t0", 0.0, 16, steps=4, coll_bytes=float(1 << 20))
+    sim = RackSimulator("lumorph", Trace((spec,)), n_chips=64)
+    m = sim.run()
+    per_step = m.tenants["t0"].collective_s / m.tenants["t0"].steps_done
+    chips = tuple(order_for_locality(tuple(range(16)), sim.tiles_per_server))
+    expect = min(build_schedule(a, chips, float(1 << 20))
+                 .cost(cm.LUMORPH_LINK, rack=sim.rack)
+                 for a in ("ring", "lumorph2", "lumorph4"))
+    assert per_step == pytest.approx(expect, rel=1e-9)
+    # and the fiber charge makes it ≥ the topology-blind price
+    blind = min(cm.algorithm_cost(a, float(1 << 20), 16, cm.LUMORPH_LINK)
+                for a in ("ring", "lumorph2", "lumorph4"))
+    assert per_step >= blind
 
 
 def test_trace_jsonl_roundtrip(tmp_path):
@@ -126,6 +147,20 @@ def test_fig2a_trace_shapes():
     assert len(t.jobs) == 100 and not t.failures
     assert all(1 <= j.chips <= 16 for j in t.jobs)
     assert all(j.steps >= 1 for j in t.jobs)
+
+
+def test_every_discipline_algo_round_trips_through_ir():
+    """Every algorithm a discipline admits must have a Schedule builder
+    (pricing/simulation) and an executable lowering (compile_schedule) —
+    the discipline/builder mismatch that once let torus list 'tree'
+    without a builder cannot recur."""
+    from repro.core.collectives import ALGOS
+    from repro.core.scheduler import SCHEDULE_BUILDERS
+    from repro.sim.engine import DISCIPLINES
+    for d in DISCIPLINES.values():
+        for algo in d.algos:
+            assert algo in SCHEDULE_BUILDERS, (d.name, algo)
+            assert algo in ALGOS, (d.name, algo)
 
 
 def test_unknown_discipline_rejected():
