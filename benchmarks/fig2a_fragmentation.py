@@ -18,9 +18,9 @@ N_CHIPS = 64
 N_EVENTS = 2000
 
 
-def run() -> list[str]:
+def run(seed: int = 0) -> list[str]:
     lines = ["name,us_per_call,derived"]
-    results = compare(fig2a_trace(N_EVENTS), n_chips=N_CHIPS,
+    results = compare(fig2a_trace(N_EVENTS, seed=seed), n_chips=N_CHIPS,
                       check_invariants=False)
     for k, m in results.items():
         s = m.summary()

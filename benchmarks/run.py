@@ -6,6 +6,7 @@ CSV rows for:
   * fig4a_training         — BERT training throughput LUMORPH vs Ring (Fig 4a)
   * fig2a_fragmentation    — multi-tenant acceptance/utilization (Fig 2a)
   * sim_rack               — event-driven multi-tenant rack simulation
+  * sim_morph              — online slice morphing vs the static baseline
   * bench_kernels          — Pallas kernels vs oracles
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
 
@@ -13,9 +14,13 @@ CSV rows for:
 an error listing the valid ones.  ``--json PATH`` additionally writes the
 results machine-readably (one record per CSV row, grouped by benchmark) so
 the perf trajectory can be tracked across PRs (``BENCH_*.json``).
+``--seed N`` re-seeds the trace generators of benchmarks that take one
+(currently the simulator-driven ones), for reproducible what-if sweeps —
+claims are only pinned for the default seed.
 """
 
 import argparse
+import inspect
 import json
 import sys
 
@@ -23,9 +28,9 @@ import sys
 def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_rack)
+                            fig4b_collectives, sim_morph, sim_rack)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, bench_kernels, bench_collective_exec]
+            sim_rack, sim_morph, bench_kernels, bench_collective_exec]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 
@@ -51,6 +56,8 @@ def main(argv=None) -> None:
                         help="benchmark module(s) to run (default: all)")
     parser.add_argument("--json", metavar="PATH", default=None,
                         help="also write machine-readable results to PATH")
+    parser.add_argument("--seed", type=int, default=None,
+                        help="re-seed benchmarks whose run() accepts a seed")
     args = parser.parse_args(argv)
 
     modules = _modules()
@@ -66,7 +73,11 @@ def main(argv=None) -> None:
     for name, m in modules.items():
         if name not in selected:
             continue
-        lines = m.run()
+        kwargs = {}
+        if (args.seed is not None
+                and "seed" in inspect.signature(m.run).parameters):
+            kwargs["seed"] = args.seed
+        lines = m.run(**kwargs)
         start = 0 if not header_printed else 1  # one CSV header total
         for line in lines[start:]:
             print(line, flush=True)

@@ -1,0 +1,147 @@
+"""Online slice morphing (`repro.morph`) vs the static baseline.
+
+Two experiments, both on the LUMORPH discipline with a *scarce* fiber
+budget (2 fibers per server pair — locality is priced, unlike the
+paper's "enough fibers" default):
+
+  * **churn** — the Fig 2a request mix with departures *and* Poisson
+    chip failures, replayed twice on identical traces: once with the
+    static rack (admission-time placement is final; failures go through
+    the elastic shrink-to-pow2 restart) and once with morphing enabled
+    (departure-triggered locality compaction + failure bypass).
+  * **bypass scenarios** — deterministic single-failure traces isolating
+    the recovery semantics: a burst failure on a nearly-full rack, where
+    the elastic baseline shrinks 12 → 8 while a partial bypass retains
+    11 of 12 chips; and a small failure with spares on hand, where the
+    bypass keeps *full* width without any elastic restart.
+
+Claims (emitted as PASS/FAIL rows, gated in CI):
+
+  * ``claim_acceptance``    — churn acceptance with morphing ≥ without.
+  * ``claim_compaction``    — ≥ 1 compaction fired, and the per-step
+    ALLREDUCE cost summed over compacted tenants is *strictly* lower on
+    the post-morph layouts than on the fragmented pre-morph layouts
+    (morph overhead is charged separately and reported).
+  * ``claim_bypass``        — bypass strictly out-retains the elastic
+    baseline where it loses capacity (11 > 8 deterministic; churn-wide
+    capacity lost to shrinks ≤ baseline), and with spares on hand keeps
+    full width with zero elastic restarts.
+"""
+
+from __future__ import annotations
+
+from repro.sim import RackSimulator, Trace
+from repro.sim.metrics import SimMetrics
+from repro.sim.workload import FailureSpec, JobSpec, fig2a_trace
+
+N_CHIPS = 64
+N_EVENTS = 400
+FAILURE_RATE = 0.03
+#: scarce inter-server fibers: scattered slices pay β time-sharing, so
+#: placement (and therefore compaction) is visible in the price
+FIBERS_PER_PAIR = 2
+
+
+def churn_trace(seed: int = 0) -> Trace:
+    return fig2a_trace(N_EVENTS, failure_rate=FAILURE_RATE, n_chips=N_CHIPS,
+                       seed=seed)
+
+
+def bypass_burst_trace() -> Trace:
+    """Nearly-full rack, 5-chip burst on a 12-chip tenant, 4 chips free:
+    elastic shrinks to 8; a partial bypass keeps 7 survivors + 4 spares."""
+    jobs = (JobSpec("victim", 0.0, 12, steps=40),
+            JobSpec("filler", 1.0, 48, steps=40),
+            JobSpec("spare", 2.0, 4, steps=2))
+    return Trace(jobs, (FailureSpec(8.0, (0, 1, 2, 3, 4)),))
+
+
+def bypass_full_trace() -> Trace:
+    """Same rack, 2 chips die with 4 free: the bypass restores full width
+    from spares without restarting the in-flight step."""
+    jobs = (JobSpec("victim", 0.0, 12, steps=40),
+            JobSpec("filler", 1.0, 48, steps=40),
+            JobSpec("spare", 2.0, 4, steps=2))
+    return Trace(jobs, (FailureSpec(8.0, (0, 1)),))
+
+
+def _pair(trace: Trace) -> tuple[SimMetrics, SimMetrics]:
+    base = RackSimulator("lumorph", trace, n_chips=N_CHIPS,
+                         fibers_per_server_pair=FIBERS_PER_PAIR).run()
+    morph = RackSimulator("lumorph", trace, n_chips=N_CHIPS,
+                          fibers_per_server_pair=FIBERS_PER_PAIR,
+                          morph=True).run()
+    return base, morph
+
+
+def _capacity_lost(m: SimMetrics) -> int:
+    """Chips of requested width lost to shrinking recoveries."""
+    return sum(r.requested - r.shrunk_to
+               for r in m.tenants.values() if r.shrunk_to is not None)
+
+
+def _width(m: SimMetrics, tenant: str) -> int:
+    rec = m.tenants[tenant]
+    return rec.shrunk_to if rec.shrunk_to is not None else rec.requested
+
+
+def run(seed: int = 0) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+
+    # ---- churn: Fig 2a mix + departures + failures -------------------------
+    base, morph = _pair(churn_trace(seed))
+    bs, ms = base.summary(), morph.summary()
+    for tag, s in (("static", bs), ("morph", ms)):
+        lines.append(f"sim_morph/{tag}/acceptance_rate,,{s['acceptance_rate']}")
+        lines.append(f"sim_morph/{tag}/mean_collective_us,,{s['mean_collective_us']}")
+        lines.append(f"sim_morph/{tag}/mean_locality,,{s['mean_locality']}")
+        lines.append(f"sim_morph/{tag}/mean_stranded_chips,,{s['mean_stranded_chips']}")
+        lines.append(f"sim_morph/{tag}/goodput_chip_seconds,,{s['goodput_chip_seconds']}")
+    # morph overhead is explicit: MZI windows + state-move pause + bytes
+    lines.append(f"sim_morph/morph/compactions,,{ms['compactions']}")
+    lines.append(f"sim_morph/morph/bypasses,,{ms['bypasses']}")
+    lines.append(f"sim_morph/morph/morph_s,,{ms['morph_s']}")
+    lines.append(f"sim_morph/morph/morph_bytes,,{ms['morph_bytes']}")
+    lines.append(f"sim_morph/morph/morph_windows,,{ms['morph_windows']}")
+    lost_b, lost_m = _capacity_lost(base), _capacity_lost(morph)
+    lines.append(f"sim_morph/static/capacity_lost_chips,,{lost_b}")
+    lines.append(f"sim_morph/morph/capacity_lost_chips,,{lost_m}")
+    # tenants that kept full width under morphing but shrank statically
+    full_wins = sum(1 for t, r in base.tenants.items()
+                    if r.shrunk_to is not None and t in morph.tenants
+                    and morph.tenants[t].shrunk_to is None
+                    and morph.tenants[t].bypassed > 0)
+    lines.append(f"sim_morph/morph/full_width_wins,,{full_wins}")
+
+    accept_ok = ms["acceptance_rate"] >= bs["acceptance_rate"]
+    lines.append(f"sim_morph/claim_acceptance,,{'PASS' if accept_ok else 'FAIL'}")
+
+    # per-step collective cost over compacted tenants, before vs after
+    lines.append(f"sim_morph/morph/compaction_step_s_before,,"
+                 f"{morph.compaction_step_s_before:.9f}")
+    lines.append(f"sim_morph/morph/compaction_step_s_after,,"
+                 f"{morph.compaction_step_s_after:.9f}")
+    compact_ok = (ms["compactions"] >= 1
+                  and morph.compaction_step_s_after < morph.compaction_step_s_before)
+    lines.append(f"sim_morph/claim_compaction,,{'PASS' if compact_ok else 'FAIL'}")
+
+    # ---- deterministic bypass scenarios ------------------------------------
+    bb, bm = _pair(bypass_burst_trace())
+    w_base, w_morph = _width(bb, "victim"), _width(bm, "victim")
+    lines.append(f"sim_morph/bypass_burst/static_width,,{w_base}")
+    lines.append(f"sim_morph/bypass_burst/morph_width,,{w_morph}")
+    fb, fm = _pair(bypass_full_trace())
+    full_rec = fm.tenants["victim"]
+    lines.append(f"sim_morph/bypass_full/morph_width,,{_width(fm, 'victim')}")
+    lines.append(f"sim_morph/bypass_full/morph_elastic_restarts,,{fm.recoveries}")
+    lines.append(f"sim_morph/bypass_full/static_elastic_restarts,,{fb.recoveries}")
+    bypass_ok = (
+        # burst: the baseline shrinks, the bypass strictly out-retains it
+        bb.tenants["victim"].shrunk_to is not None and w_morph > w_base
+        # spares on hand: full width back, no elastic restart at all
+        and full_rec.shrunk_to is None and full_rec.bypassed >= 1
+        and fm.recoveries == 0
+        # churn-wide: morphing never strands more width than the baseline
+        and lost_m <= lost_b and ms["bypasses"] >= 1)
+    lines.append(f"sim_morph/claim_bypass,,{'PASS' if bypass_ok else 'FAIL'}")
+    return lines

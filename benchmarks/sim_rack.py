@@ -48,9 +48,9 @@ def _per_step_latency(m: SimMetrics) -> dict[str, float]:
     return out
 
 
-def run() -> list[str]:
+def run(seed: int = 0) -> list[str]:
     lines = ["name,us_per_call,derived"]
-    trace = make_trace()
+    trace = make_trace(seed)
     results = compare(trace, DISCIPLINES, n_chips=N_CHIPS)
     for k, m in results.items():
         lines.extend(m.csv_rows(f"sim_rack/{k}"))

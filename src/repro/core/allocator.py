@@ -54,8 +54,39 @@ class BaseAllocator:
         raise NotImplementedError
 
     def release(self, tenant: str) -> None:
-        a = self.allocations.pop(tenant)
+        a = self.allocations.pop(tenant, None)
+        if a is None:
+            raise AllocationError(f"unknown tenant {tenant!r}: nothing to release")
         self.free.update(a.chips)
+
+    def reassign(self, tenant: str, new_chips: Sequence[int]) -> Allocation:
+        """Morph hook: atomically swap a tenant's chip set for ``new_chips``.
+
+        ``new_chips`` may only draw on the tenant's current chips and the
+        free pool; chips it no longer uses return to the free pool, so
+        rack-wide chip accounting is invariant under a reassignment.
+        Compaction plans are 1:1 remaps; a partial failure bypass may
+        shrink the slice by the dead chips it could not replace (the
+        caller retires those from the pool).
+        """
+        a = self.allocations.get(tenant)
+        if a is None:
+            raise AllocationError(f"unknown tenant {tenant!r}: nothing to reassign")
+        new = set(new_chips)
+        old = set(a.chips)
+        if not new:
+            raise AllocationError(f"{tenant}: reassignment must keep ≥ 1 chip")
+        if len(new) != len(new_chips):
+            raise AllocationError(f"{tenant}: duplicate chips in reassignment")
+        entering = new - old
+        if not entering <= self.free:
+            taken = sorted(entering - self.free)
+            raise AllocationError(f"{tenant}: chips {taken} are not free")
+        self.free -= entering
+        self.free |= old - new
+        replacement = Allocation(tenant, tuple(sorted(new)), a.requested)
+        self.allocations[tenant] = replacement
+        return replacement
 
     def fail_chips(self, chips: Sequence[int]) -> list[str]:
         """Mark chips dead; return tenants that lost capacity."""

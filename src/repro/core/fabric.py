@@ -243,3 +243,13 @@ class LumorphRack:
                 if n > self.fibers_per_server_pair:
                     raise CircuitError(
                         f"servers {key} need {n} fibers > {self.fibers_per_server_pair}")
+
+    def feasible_round(self, pairs: list[tuple[int, int]],
+                       check_fibers: bool = True) -> bool:
+        """Boolean form of :meth:`validate_round` for planners that probe
+        many candidate rounds (e.g. ``repro.morph`` state-move batching)."""
+        try:
+            self.validate_round(pairs, check_fibers=check_fibers)
+        except CircuitError:
+            return False
+        return True

@@ -351,6 +351,46 @@ def tree_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
     return Schedule("tree", tuple(chips), tuple(rounds), n_bytes, n_chunks=1)
 
 
+def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
+                      bytes_per_move: float, tag: str = "transfer") -> Schedule:
+    """Point-to-point state movement as a first-class Schedule.
+
+    ``move_rounds`` is a list of waves; each wave is a set of simultaneous
+    directed ``(src_chip, dst_chip)`` copies of ``bytes_per_move`` bytes
+    (whole-buffer, ``n_chunks=1``, overwrite semantics — a state *replay*,
+    not a reduction).  Used by ``repro.morph`` to ship a chip's shard
+    state during compaction and failure bypass; because the result is an
+    ordinary :class:`Schedule`, the moves are priced by :meth:`Schedule.cost`
+    (MZI window per wave + bytes × β with fiber time-sharing) and checked
+    by :meth:`Schedule.validate` like any collective.
+    """
+    chips: list[int] = []
+    for wave in move_rounds:
+        for s, d in wave:
+            if s == d:
+                raise ValueError(f"state move {s}→{d} is a no-op loopback")
+            for c in (s, d):
+                if c not in chips:
+                    chips.append(c)
+    rank = {c: i for i, c in enumerate(chips)}
+    p = len(chips)
+    zeros = np.zeros((max(p, 1), 1), dtype=np.int32)
+    rounds = []
+    for wave in move_rounds:
+        if not wave:
+            continue
+        fanout: dict[int, int] = {}
+        for s, _ in wave:
+            fanout[s] = fanout.get(s, 0) + 1
+        perm = tuple((rank[s], rank[d]) for s, d in wave)
+        rounds.append(Round(pairs=tuple(wave), bytes_per_circuit=bytes_per_move,
+                            egress_fanout=max(fanout.values()),
+                            transfers=(Transfer(perm, zeros, zeros,
+                                                reduce=False),)))
+    return Schedule(tag, tuple(chips), tuple(rounds),
+                    n_bytes=bytes_per_move, n_chunks=1)
+
+
 SCHEDULE_BUILDERS = {
     "ring": ring_schedule,
     "lumorph2": rhd_schedule,

@@ -1,0 +1,30 @@
+"""`repro.morph` — online slice morphing for the LUMORPH rack.
+
+The allocator makes admission fragmentation-free; this package keeps the
+rack fragmentation-free *over time*: it plans, prices, validates, and
+commits live slice transformations (photonic defragmentation, locality
+compaction, failure bypass) under running tenants, exploiting the
+fabric's 3.7 µs MZI reprogramming and Schedule-IR state transfers.
+
+  * :mod:`repro.morph.plan` — plan construction + the morph invariants
+    (chip conservation, disjoint state moves, TRX feasibility of every
+    wave, state never lost).
+  * :mod:`repro.morph.migrate` — committing a plan against an allocator
+    with conservation proofs before and after.
+  * :mod:`repro.morph.policy` — when to morph: strict-gain + amortization
+    tests for compaction, feasibility for failure bypass.
+"""
+
+from repro.morph.migrate import (MorphReport, apply_plan, check_conservation,
+                                 execute)
+from repro.morph.plan import (BYPASS, COMPACTION, MorphCost, MorphError,
+                              MorphPlan, pack_layout, plan_bypass,
+                              plan_compaction)
+from repro.morph.policy import MorphConfig, MorphPolicy, PricedMorph
+
+__all__ = [
+    "BYPASS", "COMPACTION", "MorphCost", "MorphError", "MorphPlan",
+    "pack_layout", "plan_bypass", "plan_compaction",
+    "MorphReport", "apply_plan", "check_conservation", "execute",
+    "MorphConfig", "MorphPolicy", "PricedMorph",
+]

@@ -1,0 +1,148 @@
+"""Morph decision logic: *when* is a live transformation worth it?
+
+The planners (`repro.morph.plan`) say what a morph would look like; the
+policy prices both worlds and only proposes plans that pay for
+themselves:
+
+  * a **compaction** is proposed when the tenant's cheapest admissible
+    per-step collective on the compacted layout is strictly cheaper than
+    on the current (fragmented) layout, and — with amortization on — the
+    per-step saving times the steps the tenant still has to run exceeds
+    the morph's own cost (MZI windows + state-move time).
+  * a **bypass** is proposed whenever it is feasible (free replacement
+    chips + a surviving peer to replay state from); preserving the
+    slice's full width is worth a pause of a few state-move times, since
+    the alternative — the elastic shrink-to-pow2 restart — loses capacity
+    for the tenant's whole remaining lifetime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.core.cost_model import LinkModel
+from repro.core.fabric import CircuitError, LumorphRack
+from repro.core.scheduler import build_schedule, order_for_locality
+from repro.morph.plan import (MorphCost, MorphPlan, plan_bypass,
+                              plan_compaction)
+
+#: price one algorithm on one concrete, ordered chip tuple
+PriceFn = Callable[[str, tuple[int, ...], float], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class MorphConfig:
+    """Knobs for the morph policy (all default to the paper-faithful
+    aggressive setting: morph whenever it provably helps)."""
+
+    compaction: bool = True
+    bypass: bool = True
+    #: require at least this many seconds of per-step collective saving
+    min_gain_s: float = 0.0
+    #: only compact when saving × remaining steps > morph cost
+    amortize: bool = True
+    #: per-chip shard state each move ships; ``None`` → the tenant's
+    #: collective buffer size (DP training: every rank holds a full
+    #: parameter replica of the same order as the gradient buffer)
+    state_bytes: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PricedMorph:
+    """A plan the policy endorses, with both worlds priced."""
+
+    plan: MorphPlan
+    cost: MorphCost
+    old_step_s: float  # per-step collective on the current layout
+    new_step_s: float  # per-step collective on the morphed layout
+
+    @property
+    def step_gain_s(self) -> float:
+        return self.old_step_s - self.new_step_s
+
+
+class MorphPolicy:
+    """Prices candidate morphs against a rack model and a link model.
+
+    ``price`` lets a caller inject its own (cached) schedule-pricing
+    function — the rack simulator shares its LRU so policy decisions and
+    simulated collectives are priced by literally the same numbers.
+    """
+
+    def __init__(self, config: MorphConfig, rack: LumorphRack,
+                 link: LinkModel, algos: Sequence[str],
+                 tiles_per_server: int,
+                 price: Optional[PriceFn] = None):
+        self.config = config
+        self.rack = rack
+        self.link = link
+        self.algos = tuple(algos)
+        self.tiles_per_server = tiles_per_server
+        self._price = price or self._default_price
+
+    # -- pricing -------------------------------------------------------------
+    def _default_price(self, algo: str, chips: tuple[int, ...],
+                       n_bytes: float) -> float:
+        sched = build_schedule(algo, chips, n_bytes)
+        try:
+            sched.validate(self.rack, check_fibers=False)
+        except CircuitError:
+            return float("inf")
+        return sched.cost(self.link, rack=self.rack)
+
+    def step_cost(self, chips: Sequence[int], width: int,
+                  n_bytes: float) -> float:
+        """Cheapest admissible per-step ALLREDUCE on this concrete layout
+        (participants locality-ordered, exactly like the simulator)."""
+        if width <= 1:
+            return 0.0
+        ordered = tuple(order_for_locality(tuple(chips)[:width],
+                                           self.tiles_per_server))
+        return min(self._price(a, ordered, n_bytes) for a in self.algos)
+
+    def _state_bytes(self, coll_bytes: float) -> float:
+        return (self.config.state_bytes if self.config.state_bytes is not None
+                else coll_bytes)
+
+    # -- proposals -----------------------------------------------------------
+    def propose_compaction(self, tenant: str, chips: Sequence[int],
+                           width: int, coll_bytes: float,
+                           remaining_steps: int,
+                           free: Sequence[int]) -> Optional[PricedMorph]:
+        """Endorse a compaction iff it strictly lowers the tenant's
+        per-step collective cost and (if amortizing) pays for itself over
+        the tenant's remaining steps."""
+        if not self.config.compaction or remaining_steps <= 0:
+            return None
+        plan = plan_compaction(tenant, chips, free, self.tiles_per_server,
+                               self._state_bytes(coll_bytes), rack=self.rack)
+        if plan is None:
+            return None
+        old_s = self.step_cost(plan.old_chips, width, coll_bytes)
+        new_s = self.step_cost(plan.new_chips, width, coll_bytes)
+        gain = old_s - new_s
+        if not (gain > self.config.min_gain_s and gain > 0.0):
+            return None
+        cost = plan.cost(self.link, rack=self.rack)
+        if self.config.amortize and gain * remaining_steps <= cost.total_s:
+            return None
+        return PricedMorph(plan=plan, cost=cost, old_step_s=old_s,
+                           new_step_s=new_s)
+
+    def propose_bypass(self, tenant: str, chips: Sequence[int], width: int,
+                       coll_bytes: float, dead: Sequence[int],
+                       free: Sequence[int]) -> Optional[PricedMorph]:
+        """Endorse a bypass whenever the planner finds one: full width is
+        preserved and the job's in-flight step survives, at the price of
+        the state replay (charged to the tenant by the caller)."""
+        if not self.config.bypass:
+            return None
+        plan = plan_bypass(tenant, chips, dead, free, self.tiles_per_server,
+                           self._state_bytes(coll_bytes), rack=self.rack)
+        if plan is None:
+            return None
+        old_s = self.step_cost(plan.old_chips, width, coll_bytes)
+        new_s = self.step_cost(plan.new_chips, width, coll_bytes)
+        return PricedMorph(plan=plan, cost=plan.cost(self.link, rack=self.rack),
+                           old_step_s=old_s, new_step_s=new_s)

@@ -10,6 +10,12 @@ cheap: when chips die, *any* surviving free chips can rebuild the slice
   shrinks to the largest power-of-two ≤ new slice (keeping LUMORPH-2/4
   optimal) → restore latest checkpoint onto the shrunk mesh → continue.
 
+With ``allow_bypass=True`` the restart is preceded by a cheaper attempt:
+a :mod:`repro.morph` **failure bypass** swaps a free chip into the slice
+and replays the lost shard from a surviving peer — full width survives
+and no checkpoint restore is needed; the shrink path remains the
+fallback when the rack has no spare chip.
+
 Straggler mitigation operates at the circuit level: the scheduler knows
 per-round circuit latencies, and a chip flagged slow gets its round
 partners re-routed through spare wavelengths; at the training-step level
@@ -63,6 +69,35 @@ def reallocate_after_failure(allocator, tenant: str, requested: int):
     return None
 
 
+def bypass_failure(allocator, tenant: str, dead: Sequence[int],
+                   tiles_per_server: Optional[int] = None,
+                   state_bytes: float = float(4 << 20)):
+    """Morph-based alternative to the elastic restart: swap free chips in
+    for ``tenant``'s dead ones and replay the lost shards from surviving
+    peers (`repro.morph.plan_bypass`), keeping the slice at full width.
+
+    Must run *before* the allocator is told about the failure (the plan
+    needs the victim's allocation intact).  Returns the new ``Allocation``
+    or ``None`` when no bypass is feasible — callers then fall back to
+    ``fail_chips`` + :func:`reallocate_after_failure`."""
+    from repro.morph import apply_plan, plan_bypass  # deferred: keep the
+    # runtime importable without pulling the whole morph planner in
+    a = allocator.allocations.get(tenant)
+    if a is None:
+        return None
+    if tiles_per_server is None:
+        # follow the allocator's server geometry (LUMORPH default: 8)
+        tiles_per_server = getattr(allocator, "tiles_per_server", 8)
+    free = set(allocator.free) - set(dead)
+    plan = plan_bypass(tenant, a.chips, dead, free, tiles_per_server,
+                       state_bytes)
+    if plan is None:
+        return None
+    dead_outside = allocator.n_chips - len(allocator.free) - sum(
+        len(x.chips) for x in allocator.allocations.values())
+    return apply_plan(allocator, plan, dead_chips=dead_outside)
+
+
 class ElasticJob:
     """One tenant's training job on a LUMORPH rack, with failure recovery."""
 
@@ -79,9 +114,11 @@ class ElasticJob:
         """Power-of-two DP width (keeps LUMORPH-2/4 on their optimal path)."""
         return largest_pow2_leq(len(self.chips))
 
-    def on_failure(self, step: int, failed_chips: Sequence[int]) -> RecoveryRecord:
+    def on_failure(self, step: int, failed_chips: Sequence[int],
+                   allow_bypass: bool = False) -> RecoveryRecord:
         """Handle chip failures: re-allocate from survivors, shrinking if the
-        rack can't supply a full replacement."""
+        rack can't supply a full replacement.  With ``allow_bypass``, first
+        try a live morph that swaps spare chips in at full width."""
         dead = set(failed_chips) & set(self.chips)
         if not dead:
             rec = RecoveryRecord(step, tuple(failed_chips), self.chips,
@@ -89,6 +126,14 @@ class ElasticJob:
             self.history.append(rec)
             return rec
         old = self.chips
+        if allow_bypass:
+            alloc = bypass_failure(self.allocator, self.tenant, sorted(dead))
+            if alloc is not None:
+                self.chips = alloc.chips
+                rec = RecoveryRecord(step, tuple(sorted(dead)), old, self.chips,
+                                     self.dp_width, True, "bypassed")
+                self.history.append(rec)
+                return rec
         self.allocator.fail_chips(list(dead))  # releases survivors to the pool
         alloc = reallocate_after_failure(self.allocator, self.tenant, self.requested)
         if alloc is not None:

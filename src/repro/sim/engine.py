@@ -17,11 +17,23 @@ against one allocator *discipline*:
     shows up in the Fig 2a/4b-style results.  The discipline picks the
     cheapest admissible algorithm per job; schedules are LRU-cached on
     ``(algo, chips, n_bytes)`` to keep long traces fast.
-  * **failure** — chips die permanently.  Victim tenants are re-sliced
-    from the survivors via the elastic-recovery policy of
+  * **failure** — chips die permanently.  With morphing enabled the
+    engine first tries a **failure bypass** (:mod:`repro.morph`): swap a
+    free chip into the slice and replay the lost shard state from a
+    surviving peer — the job keeps its full width and its in-flight step,
+    paying only the state-move pause.  Otherwise victim tenants are
+    re-sliced from the survivors via the elastic-recovery policy of
     :mod:`repro.runtime.fault_tolerance` (shrink through powers of two);
     a successful recovery pays another reconfiguration window, an
     unsuccessful one evicts the tenant.
+  * **departure** — the slice returns to the pool.  With morphing
+    enabled, the engine then offers every surviving tenant a **locality
+    compaction**: remap its chips toward the densest-server-first layout
+    the freed pool now admits, whenever the re-priced Schedule-IR
+    collective on the new chips is strictly cheaper and the morph
+    amortizes over the tenant's remaining steps.  Morph latency (MZI
+    windows + state-move time) is charged to the tenant as a pause of its
+    in-flight phase.
 
 The engine asserts the chip-conservation invariant
 ``allocated + free + dead == n_chips`` after **every** event, and is
@@ -43,6 +55,7 @@ from repro.core.allocator import (AllocationError, BaseAllocator,
                                   make_allocator)
 from repro.core.fabric import CircuitError, LumorphRack
 from repro.core.scheduler import build_schedule, order_for_locality
+from repro.morph import MorphConfig, MorphPolicy, PricedMorph, apply_plan
 from repro.runtime.fault_tolerance import reallocate_after_failure
 from repro.sim.metrics import SimMetrics, TenantRecord
 from repro.sim.workload import FailureSpec, JobSpec, Trace
@@ -101,6 +114,9 @@ class _Job:
     #: memoized locality-ordered participant tuple (photonic pricing);
     #: reset to None whenever ``chips`` changes
     ordered: Optional[tuple[int, ...]] = None
+    #: the job's one in-flight event ``(prio, time)``; lets a morph pause
+    #: the job by cancelling (epoch bump) and re-pushing it shifted
+    pending: Optional[tuple[int, float]] = None
 
     @property
     def width(self) -> int:
@@ -120,7 +136,8 @@ class RackSimulator:
     def __init__(self, discipline: Discipline | str, trace: Trace,
                  n_chips: int = 64, check_invariants: bool = True,
                  tiles_per_server: int = 8,
-                 fibers_per_server_pair: Optional[int] = None):
+                 fibers_per_server_pair: Optional[int] = None,
+                 morph: "MorphConfig | bool | None" = None):
         if isinstance(discipline, str):
             discipline = make_discipline(discipline)
         self.discipline = discipline
@@ -144,6 +161,18 @@ class RackSimulator:
             tiles_per_server=tiles_per_server,
             fibers_per_server_pair=fibers_per_server_pair)
         self._sched_cache: OrderedDict[tuple, float] = OrderedDict()
+        #: online slice morphing (repro.morph): compaction on departure,
+        #: bypass on failure.  Only meaningful on a reconfigurable photonic
+        #: fabric — ignored for fixed electrical disciplines, so `compare`
+        #: can pass one setting for all disciplines.
+        self.morph: Optional[MorphPolicy] = None
+        if morph and self.discipline.photonic:
+            cfg = morph if isinstance(morph, MorphConfig) else MorphConfig()
+            self.morph = MorphPolicy(cfg, rack=self.rack,
+                                     link=self.discipline.link,
+                                     algos=self.discipline.algos,
+                                     tiles_per_server=tiles_per_server,
+                                     price=self._algo_cost)
         self.now = 0.0
         self.dead: set[int] = set()
         self._jobs: dict[str, _Job] = {}  # live (accepted, not departed)
@@ -163,11 +192,55 @@ class RackSimulator:
         heapq.heappush(self._heap, (time, prio, self._seq, payload))
         self._seq += 1
 
+    def _push_job(self, time: float, prio: int, job: "_Job") -> None:
+        """Schedule a job's next phase/departure and remember it, so a
+        morph can pause the job by re-pushing the event shifted in time."""
+        job.pending = (prio, time)
+        self._push(time, prio, (job, job.epoch))
+
+    def _pause_job(self, job: "_Job", delay: float) -> None:
+        """Charge ``delay`` seconds of morph time to the job: cancel its
+        in-flight event (epoch bump) and re-push it ``delay`` later."""
+        assert job.pending is not None, "live job has no pending event"
+        prio, time = job.pending
+        job.epoch += 1
+        self._push_job(max(time, self.now) + delay, prio, job)
+
     def _advance_to(self, time: float) -> None:
         allocated = sum(len(j.chips) for j in self._jobs.values())
         requested = sum(j.width for j in self._jobs.values())
-        self.metrics.advance(time - self.now, allocated, requested)
+        self.metrics.advance(time - self.now, allocated, requested,
+                             locality=self._locality(),
+                             stranded=self._stranded_free())
         self.now = time
+
+    def _locality(self) -> Optional[float]:
+        """Mean span ratio of live tenants: servers spanned over the
+        minimum servers the slice size needs (1.0 = perfectly packed)."""
+        if not self._jobs:
+            return None
+        tiles = self.tiles_per_server
+        total = 0.0
+        for j in self._jobs.values():
+            spans = len({c // tiles for c in j.chips})
+            ideal = -(-len(j.chips) // tiles)
+            total += spans / ideal
+        return total / len(self._jobs)
+
+    def _stranded_free(self) -> int:
+        """Free chips on *partially occupied* servers: the scattered
+        spares a future tenant would pay fiber time-sharing to use.
+        Chips on entirely-free servers are not stranded (an idle or
+        perfectly compacted rack reports 0)."""
+        free = self.allocator.free
+        if not free:
+            return 0
+        tiles = self.tiles_per_server
+        per_server: dict[int, int] = {}
+        for c in free:
+            per_server[c // tiles] = per_server.get(c // tiles, 0) + 1
+        full = min(tiles, self.n_chips)  # a 1-server rack can be smaller
+        return sum(n for n in per_server.values() if n < full)
 
     def _check(self) -> None:
         allocated = set()
@@ -250,7 +323,7 @@ class RackSimulator:
         reconf = self.discipline.link.reconfig
         if reconf:
             self.metrics.on_reconfig(rec, reconf)
-        self._push(self.now + reconf + spec.compute_s, _PHASE, (job, job.epoch))
+        self._push_job(self.now + reconf + spec.compute_s, _PHASE, job)
 
     def _on_phase(self, payload: tuple[_Job, int]) -> None:
         """A compute phase just finished: price the step's collective and
@@ -264,9 +337,9 @@ class RackSimulator:
         job.step += 1
         job.rec.steps_done = job.step
         if job.step >= job.spec.steps:
-            self._push(self.now + coll, _DEPART, (job, job.epoch))
+            self._push_job(self.now + coll, _DEPART, job)
         else:
-            self._push(self.now + coll + job.spec.compute_s, _PHASE, (job, job.epoch))
+            self._push_job(self.now + coll + job.spec.compute_s, _PHASE, job)
 
     def _on_depart(self, payload: tuple[_Job, int]) -> None:
         job, epoch = payload
@@ -278,6 +351,50 @@ class RackSimulator:
         job.rec.completed = True
         job.rec.end = self.now
         self.metrics.completed += 1
+        self._maybe_compact()
+
+    # -- morphing ------------------------------------------------------------
+    def _dead_outside_allocator(self) -> int:
+        """Dead chips currently tracked by neither the free pool nor any
+        allocation (the conservation checker's third bucket)."""
+        held = sum(len(a.chips) for a in self.allocator.allocations.values())
+        return self.n_chips - held - len(self.allocator.free)
+
+    def _commit_morph(self, job: _Job, pm: PricedMorph) -> None:
+        """Apply an endorsed plan: reassign chips under the conservation
+        proofs, re-price future collectives on the new layout, and charge
+        the pause to the tenant."""
+        apply_plan(self.allocator, pm.plan, rack=self.rack,
+                   dead_chips=self._dead_outside_allocator())
+        job.chips = self.allocator.allocations[job.spec.tenant].chips
+        job.ordered = None  # future schedules re-priced on the new chips
+        if pm.plan.kind == "bypass":
+            # a partial bypass shrinks by the dead chips the pool could
+            # not replace; a full bypass (or a later one that back-fills)
+            # restores full width
+            job.rec.shrunk_to = (len(job.chips)
+                                 if len(job.chips) < job.spec.chips else None)
+        self._pause_job(job, pm.cost.total_s)
+        self.metrics.on_morph(job.rec, pm.plan.kind, pm.cost.total_s,
+                              pm.cost.bytes_moved, pm.cost.reconfig_windows,
+                              pm.old_step_s, pm.new_step_s)
+
+    def _maybe_compact(self) -> None:
+        """Departure freed chips: offer every surviving tenant a locality
+        compaction (tenant order is deterministic; each commit updates the
+        free pool the next proposal sees)."""
+        if self.morph is None:
+            return
+        for tenant in sorted(self._jobs):
+            job = self._jobs[tenant]
+            if not job.alive or job.width <= 1:
+                continue
+            pm = self.morph.propose_compaction(
+                tenant, job.chips, job.width, job.spec.coll_bytes,
+                remaining_steps=job.spec.steps - job.step,
+                free=sorted(self.allocator.free))
+            if pm is not None:
+                self._commit_morph(job, pm)
 
     def _on_failure(self, fail: FailureSpec) -> None:
         fresh = [c for c in fail.chips if c not in self.dead]
@@ -285,6 +402,28 @@ class RackSimulator:
             return
         self.dead.update(fresh)
         self.metrics.failures_injected += len(fresh)
+        dead = set(fresh)
+        if self.morph is not None:
+            # failure bypass: swap free chips into hit slices and replay
+            # the lost shards from surviving peers — the job keeps its
+            # width and its in-flight step.  Tenants the planner cannot
+            # serve (no free chip, no surviving peer) fall through to the
+            # elastic-restart path below.
+            for tenant in sorted(self._jobs):
+                job = self._jobs[tenant]
+                lost = dead & set(job.chips)
+                if not job.alive or not lost:
+                    continue
+                if job.step >= job.spec.steps:
+                    # no work left — don't spend spare chips on a tenant
+                    # that is about to depart; the elastic path below
+                    # hands its slice straight back
+                    continue
+                pm = self.morph.propose_bypass(
+                    tenant, job.chips, job.width, job.spec.coll_bytes,
+                    dead=sorted(lost), free=sorted(self.allocator.free - dead))
+                if pm is not None:
+                    self._commit_morph(job, pm)
         victims = self.allocator.fail_chips(fresh)
         for tenant in victims:
             job = self._jobs.get(tenant)
@@ -319,10 +458,10 @@ class RackSimulator:
             if job.step >= job.spec.steps:
                 # the failure landed between the job's last collective and
                 # its departure: no work is left, just hand the slice back
-                self._push(self.now + reconf, _DEPART, (job, job.epoch))
+                self._push_job(self.now + reconf, _DEPART, job)
             else:
-                self._push(self.now + reconf + job.spec.compute_s, _PHASE,
-                           (job, job.epoch))
+                self._push_job(self.now + reconf + job.spec.compute_s,
+                               _PHASE, job)
 
     # -- main loop -----------------------------------------------------------
     def run(self, max_events: Optional[int] = None) -> SimMetrics:
@@ -342,15 +481,19 @@ class RackSimulator:
 
 
 def simulate(kind: str, trace: Trace, n_chips: int = 64,
-             check_invariants: bool = True) -> SimMetrics:
+             check_invariants: bool = True,
+             morph: "MorphConfig | bool | None" = None) -> SimMetrics:
     """Convenience wrapper: replay ``trace`` on discipline ``kind``."""
     return RackSimulator(kind, trace, n_chips=n_chips,
-                         check_invariants=check_invariants).run()
+                         check_invariants=check_invariants, morph=morph).run()
 
 
 def compare(trace: Trace, kinds: Sequence[str] = ("lumorph", "torus", "sipac"),
             n_chips: int = 64, check_invariants: bool = True,
+            morph: "MorphConfig | bool | None" = None,
             ) -> dict[str, SimMetrics]:
-    """Replay the same trace on every discipline (the Fig 2a experiment)."""
+    """Replay the same trace on every discipline (the Fig 2a experiment).
+    ``morph`` only affects photonic disciplines (it is a fabric capability)."""
     return {k: simulate(k, trace, n_chips=n_chips,
-                        check_invariants=check_invariants) for k in kinds}
+                        check_invariants=check_invariants, morph=morph)
+            for k in kinds}

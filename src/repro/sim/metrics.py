@@ -27,6 +27,9 @@ class TenantRecord:
     collective_s: float = 0.0  # total ALLREDUCE time across the job
     reconfig_windows: int = 0  # MZI reprogramming windows charged
     shrunk_to: Optional[int] = None  # width after a shrinking recovery
+    morphs: int = 0  # live transformations (compactions + bypasses)
+    morph_s: float = 0.0  # pause time charged to this tenant for morphing
+    bypassed: int = 0  # failures absorbed by bypass instead of restart
 
     @property
     def jct(self) -> Optional[float]:
@@ -49,6 +52,17 @@ class SimMetrics:
         self.failures_injected = 0  # chips killed
         self.recoveries = 0  # successful post-failure re-allocations
         self.reconfig_windows = 0
+        # morphing (repro.morph): live compaction / failure bypass
+        self.compactions = 0
+        self.bypasses = 0
+        self.morph_s = 0.0  # total pause time charged for morphs
+        self.morph_bytes = 0.0  # shard state shipped by morph Transfers
+        self.morph_windows = 0  # MZI windows spent morphing
+        #: per-step collective cost summed over compacted tenants, priced
+        #: on the layout right before / right after each compaction — the
+        #: defragmentation claim compares exactly these two
+        self.compaction_step_s_before = 0.0
+        self.compaction_step_s_after = 0.0
         # time integrals
         self.util_integral = 0.0  # ∫ utilization dt
         self.busy_chip_seconds = 0.0  # ∫ allocated_chips dt
@@ -57,21 +71,39 @@ class SimMetrics:
         self.collective_s = 0.0
         self.compute_s = 0.0
         self.reconfig_s = 0.0
+        #: ∫ mean over live tenants of (servers spanned / minimum servers
+        #: their size needs) dt — 1.0 is perfect locality
+        self.locality_integral = 0.0
+        self.locality_time = 0.0  # time with ≥1 live tenant
+        #: ∫ stranded free capacity dt: free chips on partially occupied
+        #: servers (scattered spares raise future tenants' fiber costs
+        #: even though LUMORPH can still use them; entirely-free servers
+        #: contribute nothing)
+        self.stranded_chip_seconds = 0.0
         self.horizon = 0.0  # last event time
         # per-tenant
         self.tenants: dict[str, TenantRecord] = {}
         self._collective_samples = 0
 
     # -- integrals -----------------------------------------------------------
-    def advance(self, dt: float, allocated: int, requested: int) -> None:
+    def advance(self, dt: float, allocated: int, requested: int,
+                locality: Optional[float] = None,
+                stranded: int = 0) -> None:
         """Advance the clock by ``dt`` with ``allocated`` chips held by
-        tenants that requested ``requested`` chips in total."""
+        tenants that requested ``requested`` chips in total.  ``locality``
+        is the live tenants' mean span ratio (None when no tenant is
+        live); ``stranded`` counts scattered free chips (see
+        :attr:`stranded_chip_seconds`)."""
         if dt <= 0:
             return
         self.util_integral += dt * (allocated / self.n_chips if self.n_chips else 0.0)
         self.busy_chip_seconds += dt * allocated
         self.goodput_chip_seconds += dt * requested
         self.wasted_chip_seconds += dt * (allocated - requested)
+        if locality is not None:
+            self.locality_integral += dt * locality
+            self.locality_time += dt
+        self.stranded_chip_seconds += dt * stranded
 
     # -- phase accounting ----------------------------------------------------
     def on_collective(self, rec: TenantRecord, seconds: float) -> None:
@@ -83,6 +115,27 @@ class SimMetrics:
         self.reconfig_s += seconds
         self.reconfig_windows += 1
         rec.reconfig_windows += 1
+
+    def on_morph(self, rec: TenantRecord, kind: str, seconds: float,
+                 bytes_moved: float, windows: int,
+                 old_step_s: float = 0.0, new_step_s: float = 0.0) -> None:
+        """Account one committed morph (``kind`` ∈ compaction|bypass):
+        the pause charged to the tenant, the shard bytes its Transfers
+        shipped, and the MZI windows spent."""
+        self.morph_s += seconds
+        self.morph_bytes += bytes_moved
+        self.morph_windows += windows
+        self.reconfig_windows += windows
+        rec.morphs += 1
+        rec.morph_s += seconds
+        rec.reconfig_windows += windows
+        if kind == "compaction":
+            self.compactions += 1
+            self.compaction_step_s_before += old_step_s
+            self.compaction_step_s_after += new_step_s
+        else:
+            self.bypasses += 1
+            rec.bypassed += 1
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -100,6 +153,23 @@ class SimMetrics:
         if not self._collective_samples:
             return 0.0
         return 1e6 * self.collective_s / self._collective_samples
+
+    @property
+    def mean_locality(self) -> float:
+        """Time-weighted mean span ratio of live tenants (1.0 = every
+        tenant on the fewest servers its size allows)."""
+        return (self.locality_integral / self.locality_time
+                if self.locality_time else 1.0)
+
+    @property
+    def mean_stranded_chips(self) -> float:
+        """Time-weighted mean count of scattered free chips."""
+        return self.stranded_chip_seconds / self.horizon if self.horizon else 0.0
+
+    @property
+    def compaction_gain_s(self) -> float:
+        """Per-step collective seconds saved across all compactions."""
+        return self.compaction_step_s_before - self.compaction_step_s_after
 
     @property
     def mean_jct(self) -> float:
@@ -127,6 +197,14 @@ class SimMetrics:
             "reconfig_s": round(self.reconfig_s, 9),
             "mean_jct_s": round(self.mean_jct, 6),
             "horizon_s": round(self.horizon, 6),
+            "compactions": self.compactions,
+            "bypasses": self.bypasses,
+            "morph_s": round(self.morph_s, 9),
+            "morph_bytes": round(self.morph_bytes, 3),
+            "morph_windows": self.morph_windows,
+            "compaction_gain_s": round(self.compaction_gain_s, 9),
+            "mean_locality": round(self.mean_locality, 6),
+            "mean_stranded_chips": round(self.mean_stranded_chips, 6),
         }
 
     def csv_rows(self, prefix: str) -> list[str]:
@@ -135,5 +213,6 @@ class SimMetrics:
         keys = ("acceptance_rate", "fragmentation_rejects", "mean_utilization",
                 "goodput_chip_seconds", "wasted_chip_seconds",
                 "mean_collective_us", "reconfig_windows", "mean_jct_s",
-                "completed", "evicted", "recoveries", "events")
+                "completed", "evicted", "recoveries", "events",
+                "compactions", "bypasses", "morph_s", "mean_locality")
         return [f"{prefix}/{k},,{s[k]}" for k in keys]

@@ -153,12 +153,17 @@ def poisson_trace(n_jobs: int, *, arrival_rate: float = 0.5,
 
 def fig2a_trace(n_events: int = 2000, *, mean_lifetime: float = 60.0,
                 compute_s: float = 6.0, coll_bytes: float = float(4 << 20),
+                failure_rate: float = 0.0, n_chips: int = 64,
                 seed: int = 0) -> Trace:
     """The paper's Fig 2a churn: one arrival per unit time, sizes from the
     mixed request distribution, exponential lifetimes (mean 60 time units).
 
     ``compute_s`` sets the step granularity: a tenant's lifetime is carved
     into ``lifetime / compute_s`` compute→collective phases.
+    ``failure_rate`` adds Poisson single-chip failures (failures/s) over
+    the arrival horizon — the morph benchmarks stress departures *and*
+    failures on the same Fig 2a mix.  Jobs are drawn before failures, so a
+    given seed's arrival sequence is identical at any failure rate.
     """
     rng = np.random.RandomState(seed)
     jobs = []
@@ -169,7 +174,16 @@ def fig2a_trace(n_events: int = 2000, *, mean_lifetime: float = 60.0,
         jobs.append(JobSpec(tenant=f"t{t}", arrival=float(t), chips=k,
                             steps=steps, compute_s=compute_s,
                             coll_bytes=coll_bytes))
-    return Trace(tuple(jobs))
+    failures = []
+    if failure_rate > 0:
+        ft = 0.0
+        while True:
+            ft += rng.exponential(1.0 / failure_rate)
+            if ft >= float(n_events):
+                break
+            chip = int(rng.randint(n_chips))
+            failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))
+    return Trace(tuple(jobs), tuple(failures))
 
 
 def failure_injection_trace(*, n_chips: int = 64, seed: int = 0) -> Trace:

@@ -74,6 +74,18 @@ def test_release_returns_capacity():
     a.allocate("t1", 16)
 
 
+def test_release_unknown_tenant_raises_allocation_error():
+    """A typo'd tenant name must surface as an AllocationError naming the
+    tenant, not a bare KeyError from the bookkeeping dict."""
+    a = LumorphAllocator(16)
+    a.allocate("t0", 4)
+    with pytest.raises(AllocationError, match="unknown tenant 'nope'"):
+        a.release("nope")
+    a.release("t0")
+    with pytest.raises(AllocationError, match="'t0'"):
+        a.release("t0")  # double release: already gone
+
+
 def test_fail_chips_reclaims_survivors():
     a = LumorphAllocator(16)
     alloc = a.allocate("t0", 8)

@@ -1,0 +1,292 @@
+"""Online slice morphing (`repro.morph`): plan invariants, policy
+guarantees, allocator hooks, and end-to-end engine behavior.
+
+Property tests pin the morph invariant layer: any planned morph conserves
+chips, keeps every intermediate state-move wave within the photonic
+TRX/fiber limits, never loses tenant state, and — for policy-endorsed
+compactions — strictly lowers the slice's Schedule-IR collective cost.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.allocator import AllocationError, LumorphAllocator
+from repro.core.fabric import LumorphRack
+from repro.core.scheduler import transfer_schedule
+from repro.morph import (MorphConfig, MorphError, MorphPolicy, apply_plan,
+                         check_conservation, plan_bypass, plan_compaction)
+from repro.runtime.fault_tolerance import reallocate_after_failure
+from repro.sim import RackSimulator, Trace, simulate
+from repro.sim.workload import FailureSpec, JobSpec, poisson_trace
+
+TILES = 8
+STATE = float(1 << 20)
+
+
+def _rack(fibers: int = 2) -> LumorphRack:
+    return LumorphRack(n_servers=8, tiles_per_server=TILES,
+                       fibers_per_server_pair=fibers)
+
+
+def _fragmented_allocator(requests, releases):
+    """Replay an alloc/release history; returns the allocator and the
+    tenants still live."""
+    a = LumorphAllocator(64, tiles_per_server=TILES)
+    live = []
+    for i, k in enumerate(requests):
+        if k <= len(a.free):
+            a.allocate(f"t{i}", k)
+            live.append(f"t{i}")
+    for idx in releases:
+        if live:
+            a.release(live.pop(idx % len(live)))
+    return a, live
+
+
+# ---------------------------------------------------------------------------
+# plan invariants (properties)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(min_value=1, max_value=16), min_size=2, max_size=10),
+       st.lists(st.integers(min_value=0, max_value=9), min_size=1, max_size=5))
+@settings(max_examples=60, deadline=None)
+def test_compaction_plan_invariants(requests, releases):
+    """Any compaction plan conserves chips, draws only on the tenant's own
+    chips plus the free pool, moves state with endpoint-disjoint waves
+    that pass the photonic dry check, and strictly reduces server span."""
+    a, live = _fragmented_allocator(requests, releases)
+    rack = _rack()
+    for t in live:
+        chips = a.allocations[t].chips
+        plan = plan_compaction(t, chips, a.free, TILES, STATE, rack=rack)
+        if plan is None:
+            continue
+        old, new = set(plan.old_chips), set(plan.new_chips)
+        assert len(new) == len(old)  # chip conservation
+        assert new <= old | a.free  # only own chips + free pool
+        assert {d for _, d in plan.moves} == new - old  # state never lost
+        assert {s for s, _ in plan.moves} == old - new
+        assert (len({c // TILES for c in new})
+                < len({c // TILES for c in old}))
+        for r in plan.schedule.rounds:  # every intermediate wave feasible
+            rack.validate_round(list(r.pairs), check_fibers=False)
+            ends = [c for p in r.pairs for c in p]
+            assert len(ends) == len(set(ends))  # endpoint-disjoint
+        # committing it preserves allocator-level conservation
+        apply_plan(a, plan, rack=rack)
+        check_conservation(a)
+        assert tuple(sorted(new)) == a.allocations[t].chips
+
+
+@given(st.lists(st.integers(min_value=1, max_value=16), min_size=2, max_size=10),
+       st.integers(min_value=1, max_value=6))
+@settings(max_examples=60, deadline=None)
+def test_bypass_plan_invariants(requests, n_dead):
+    """Any bypass plan keeps every surviving shard, excludes every dead
+    chip, replays state only from surviving peers, and never retains less
+    width than the elastic shrink-to-pow2 fallback would."""
+    a, live = _fragmented_allocator(requests, [])
+    if not live:
+        return
+    rack = _rack()
+    t = live[0]
+    chips = a.allocations[t].chips
+    dead = list(chips[:min(n_dead, len(chips))])
+    plan = plan_bypass(t, chips, dead, a.free, TILES, STATE, rack=rack)
+    survivors = set(chips) - set(dead)
+    if plan is None:
+        assert not survivors  # only infeasible when every peer died
+        return
+    new = set(plan.new_chips)
+    assert survivors <= new  # no surviving shard is thrown away
+    assert not (new & set(dead))  # dead chips are out
+    assert len(new) == len(survivors) + min(len(dead), len(a.free))
+    for s, _ in plan.moves:
+        assert s in survivors  # state replays only from live peers
+    for r in plan.schedule.rounds:
+        rack.validate_round(list(r.pairs), check_fibers=False)
+    # capacity: bypass ≥ what the elastic restart would have retained
+    b = LumorphAllocator(64, tiles_per_server=TILES)
+    for name, alloc in a.allocations.items():
+        b.free -= set(alloc.chips)
+        b.allocations[name] = alloc
+    b.fail_chips(dead)
+    elastic = reallocate_after_failure(b, t, len(chips))
+    elastic_width = len(elastic.chips) if elastic is not None else 0
+    assert len(new) >= elastic_width
+
+
+@given(st.lists(st.integers(min_value=1, max_value=16), min_size=3, max_size=10),
+       st.lists(st.integers(min_value=0, max_value=9), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_policy_compaction_strictly_cheaper(requests, releases):
+    """Every policy-endorsed compaction strictly lowers the slice's
+    cheapest admissible Schedule-IR collective cost, and the priced gain
+    amortizes over the tenant's remaining steps."""
+    a, live = _fragmented_allocator(requests, releases)
+    rack = _rack()
+    pol = MorphPolicy(MorphConfig(), rack=rack, link=cm.LUMORPH_LINK,
+                      algos=("ring", "lumorph2", "lumorph4"),
+                      tiles_per_server=TILES)
+    for t in live:
+        chips = a.allocations[t].chips
+        pm = pol.propose_compaction(t, chips, len(chips), STATE,
+                                    remaining_steps=1000, free=sorted(a.free))
+        if pm is None:
+            continue
+        assert pm.new_step_s < pm.old_step_s
+        assert pm.old_step_s == pol.step_cost(chips, len(chips), STATE)
+        assert pm.new_step_s == pol.step_cost(pm.plan.new_chips,
+                                              len(chips), STATE)
+        assert pm.step_gain_s * 1000 > pm.cost.total_s  # amortizes
+        assert pm.cost.reconfig_windows >= 2  # ≥1 move wave + re-establish
+
+
+# ---------------------------------------------------------------------------
+# allocator morph hook + release fix
+# ---------------------------------------------------------------------------
+
+def test_reassign_swaps_chips_and_conserves():
+    a = LumorphAllocator(16, tiles_per_server=4)
+    a.allocate("t0", 4)
+    old = set(a.allocations["t0"].chips)
+    target = sorted(set(range(16)) - old)[:4]
+    a.reassign("t0", target)
+    assert set(a.allocations["t0"].chips) == set(target)
+    assert old <= a.free
+    check_conservation(a)
+
+
+def test_reassign_rejects_taken_and_unknown():
+    a = LumorphAllocator(16, tiles_per_server=4)
+    a.allocate("t0", 4)
+    a.allocate("t1", 4)
+    with pytest.raises(AllocationError, match="not free"):
+        a.reassign("t0", a.allocations["t1"].chips)
+    with pytest.raises(AllocationError, match="unknown tenant"):
+        a.reassign("ghost", [0, 1])
+    with pytest.raises(AllocationError, match="duplicate"):
+        a.reassign("t0", [8, 8, 9, 10])
+
+
+# ---------------------------------------------------------------------------
+# transfer_schedule (state moves on the Schedule IR)
+# ---------------------------------------------------------------------------
+
+def test_transfer_schedule_priced_like_any_schedule():
+    sched = transfer_schedule([[(0, 9)]], 1e6, tag="morph-test")
+    assert sched.reconfigurations() == 1
+    expect = cm.LUMORPH_LINK.alpha + cm.MZI_RECONFIG_DELAY + 1e6 * cm.LUMORPH_LINK.beta
+    assert sched.cost(cm.LUMORPH_LINK) == pytest.approx(expect)
+    with pytest.raises(ValueError, match="loopback"):
+        transfer_schedule([[(3, 3)]], 1e6)
+
+
+def test_morph_plan_rejects_state_loss():
+    """Hand-built plan whose entering chip receives no state copy."""
+    from repro.morph.plan import COMPACTION, MorphPlan
+    sched = transfer_schedule([], 1e6)
+    plan = MorphPlan(tenant="t", kind=COMPACTION, old_chips=(0, 1),
+                     new_chips=(0, 2), moves=(), state_bytes=1e6,
+                     schedule=sched)
+    with pytest.raises(MorphError, match="state-never-lost"):
+        plan.validate()
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def _churn_trace(seed=0):
+    return poisson_trace(60, arrival_rate=0.4, mean_steps=8.0,
+                         failure_rate=0.02, seed=seed)
+
+
+def test_engine_invariants_hold_with_morph():
+    """Chip conservation is asserted after every event with morphing on,
+    and morphs actually fire."""
+    sim = RackSimulator("lumorph", _churn_trace(), n_chips=64,
+                        fibers_per_server_pair=2, morph=True)
+    m = sim.run()
+    assert m.compactions + m.bypasses > 0
+    assert m.morph_s > 0 and m.morph_windows > 0
+    allocated = {c for a in sim.allocator.allocations.values() for c in a.chips}
+    assert len(allocated) + len(sim.allocator.free) + len(sim.dead) == 64
+    assert not (sim.dead & sim.allocator.free)
+
+
+def test_morph_deterministic():
+    a = simulate("lumorph", _churn_trace(3), morph=True)
+    b = simulate("lumorph", _churn_trace(3), morph=True)
+    assert a.summary() == b.summary()
+
+
+def test_morph_ignored_on_fixed_topologies():
+    """Morphing is a photonic-fabric capability: torus/SiPAC results are
+    bit-identical with and without the flag."""
+    for kind in ("torus", "sipac"):
+        off = simulate(kind, _churn_trace(1))
+        on = simulate(kind, _churn_trace(1), morph=True)
+        assert off.summary() == on.summary()
+
+
+def test_bypass_keeps_width_where_elastic_shrinks():
+    """Nearly-full rack, burst failure: the static run shrinks 12 → 8,
+    the morphing run retains 11 of 12 (7 survivors + all 4 spares) and
+    never pays an elastic restart."""
+    jobs = (JobSpec("victim", 0.0, 12, steps=40),
+            JobSpec("filler", 1.0, 48, steps=40),
+            JobSpec("spare", 2.0, 4, steps=2))
+    trace = Trace(jobs, (FailureSpec(8.0, (0, 1, 2, 3, 4)),))
+    base = simulate("lumorph", trace, n_chips=64)
+    morph = simulate("lumorph", trace, n_chips=64, morph=True)
+    assert base.tenants["victim"].shrunk_to == 8
+    assert morph.tenants["victim"].shrunk_to == 11
+    assert morph.bypasses == 1 and morph.recoveries == 0
+    assert morph.tenants["victim"].morph_s > 0  # overhead charged
+
+
+def test_full_bypass_restores_full_width_without_restart():
+    jobs = (JobSpec("victim", 0.0, 12, steps=40),
+            JobSpec("filler", 1.0, 48, steps=40),
+            JobSpec("spare", 2.0, 4, steps=2))
+    trace = Trace(jobs, (FailureSpec(8.0, (0, 1)),))
+    m = simulate("lumorph", trace, n_chips=64, morph=True)
+    rec = m.tenants["victim"]
+    assert rec.shrunk_to is None and rec.bypassed == 1
+    assert m.recoveries == 0 and rec.completed
+
+
+def test_compaction_fires_on_departure_and_pays_off():
+    """One tenant is deliberately scattered across two half-occupied
+    servers; when a co-tenant departs, compaction pulls it into one
+    server and the per-step collective gets strictly cheaper."""
+    jobs = (JobSpec("hog", 0.0, 4, steps=2, compute_s=1.0),
+            JobSpec("stay", 0.5, 4, steps=400, compute_s=1.0),
+            JobSpec("frag", 1.0, 8, steps=400, compute_s=1.0,
+                    coll_bytes=float(4 << 20)))
+    sim = RackSimulator("lumorph", Trace(jobs), n_chips=16,
+                        fibers_per_server_pair=1, morph=True)
+    m = sim.run()
+    assert m.compactions >= 1
+    assert m.compaction_step_s_after < m.compaction_step_s_before
+    # after compaction the tenant sits in one server (8 chips, 8 tiles)
+    chips = sim.allocator.allocations.get("frag")
+    final = m.tenants["frag"]
+    assert final.morphs >= 1 and final.morph_s > 0
+    if chips is not None:
+        assert len({c // 8 for c in chips.chips}) == 1
+
+
+def test_elastic_job_bypass_path():
+    alloc = LumorphAllocator(64, tiles_per_server=8)
+    from repro.runtime.fault_tolerance import ElasticJob
+    job = ElasticJob(alloc, "train", 16)
+    dead = job.chips[:2]
+    rec = job.on_failure(step=10, failed_chips=dead, allow_bypass=True)
+    assert rec.recovered and rec.reason == "bypassed"
+    assert len(job.chips) == 16  # full width, no restart
+    assert not set(dead) & set(job.chips)
+    assert not set(dead) & alloc.free  # dead chips retired for good
+    check_conservation(alloc, extra_chips=len(dead))
