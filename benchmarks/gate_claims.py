@@ -1,0 +1,41 @@
+"""CI claim gate: assert every ``/claim_`` row in BENCH_*.json is PASS.
+
+Usage::
+
+    python benchmarks/gate_claims.py BENCH_sim_rack.json [BENCH_...json ...]
+
+Both CI jobs (fast and slow) invoke this one script, so the gating
+semantics cannot drift between them.  Exits non-zero (with the failing
+claim names) if any claim row is not PASS, or if a file emitted no
+claims at all — a benchmark silently dropping its claims must fail CI,
+not pass it.
+"""
+
+import json
+import sys
+
+
+def gate(path: str) -> list[str]:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {r["name"]: r.get("derived")
+            for b in payload["benchmarks"] for r in b["rows"]}
+    claims = sorted(n for n in rows if "/claim_" in n)
+    if not claims:
+        raise SystemExit(f"{path} emitted no claims")
+    failed = [n for n in claims if rows[n] != "PASS"]
+    if failed:
+        raise SystemExit(f"{path} claims failed: {failed}")
+    print(f"{path} claims all PASS:", ", ".join(claims))
+    return claims
+
+
+def main(argv: list[str]) -> None:
+    if not argv:
+        raise SystemExit("usage: gate_claims.py BENCH_x.json [BENCH_y.json ...]")
+    for path in argv:
+        gate(path)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

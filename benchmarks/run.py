@@ -7,6 +7,8 @@ CSV rows for:
   * fig2a_fragmentation    — multi-tenant acceptance/utilization (Fig 2a)
   * sim_rack               — event-driven multi-tenant rack simulation
   * sim_morph              — online slice morphing vs the static baseline
+  * sim_pod                — pod-scale fabric: hierarchical collectives +
+                             rack-spanning allocation vs flat/confined
   * bench_kernels          — Pallas kernels vs oracles
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
 
@@ -28,9 +30,10 @@ import sys
 def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_morph, sim_rack)
+                            fig4b_collectives, sim_morph, sim_pod, sim_rack)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, sim_morph, bench_kernels, bench_collective_exec]
+            sim_rack, sim_morph, sim_pod, bench_kernels,
+            bench_collective_exec]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 

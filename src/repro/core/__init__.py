@@ -8,14 +8,18 @@
                         reconfiguration; ``algorithm_cost`` delegates to
                         ``Schedule.cost`` (closed forms = cross-checks)
   * ``fabric``       -- LIGHTPATH photonic fabric + LUMORPH rack resource model
+  * ``rack``         -- the pod tier: N racks joined by inter-rack photonic
+                        rails (per-rack-pair budgets, rack-tier OCS windows)
   * ``allocator``    -- fragmentation-free multi-tenant allocation + baselines
+                        incl. rack-first pod placement
   * ``sipac``        -- SiPAC(r, l) emulation (paper Fig 3)
   * ``collectives``  -- ``compile_schedule``: Schedule -> shard_map/ppermute
                         ALLREDUCE (ring / LUMORPH-2 / -4 / tree), optional
                         per-hop payload transforms (int8 compression)
 """
 
-from repro.core import allocator, collectives, cost_model, fabric, scheduler, sipac  # noqa: F401
+from repro.core import (allocator, collectives, cost_model, fabric, rack,  # noqa: F401
+                        scheduler, sipac)
 from repro.core.collectives import all_reduce, make_all_reduce  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     IDEAL_SWITCH,

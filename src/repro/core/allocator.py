@@ -25,6 +25,8 @@ import itertools
 import math
 from typing import Sequence
 
+from repro.core.rack import group_by_rack
+
 
 @dataclasses.dataclass
 class Allocation:
@@ -122,15 +124,12 @@ class LumorphAllocator(BaseAllocator):
         super().__init__(n_chips)
         self.tiles_per_server = tiles_per_server
 
-    def allocate(self, tenant: str, k: int) -> Allocation:
-        if k <= 0:
-            raise ValueError("k must be positive")
-        if k > len(self.free):
-            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
-        # densest-server-first packing: minimizes the number of servers a
-        # tenant spans, conserving the rack's inter-server fiber budget.
+    def _pack(self, candidates: Sequence[int], k: int) -> list[int]:
+        """Densest-server-first packing of ``k`` chips from ``candidates``:
+        minimizes the number of servers a tenant spans, conserving the
+        rack's inter-server fiber budget."""
         by_server: dict[int, list[int]] = {}
-        for c in self.free:
+        for c in candidates:
             by_server.setdefault(c // self.tiles_per_server, []).append(c)
         order = sorted(by_server.values(), key=len, reverse=True)
         picked: list[int] = []
@@ -139,6 +138,76 @@ class LumorphAllocator(BaseAllocator):
             picked.extend(sorted(server_chips)[:take])
             if len(picked) == k:
                 break
+        return picked
+
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        if k <= 0:
+            raise ValueError("k must be positive")
+        if k > len(self.free):
+            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
+        return self._commit(tenant, self._pack(self.free, k), k)
+
+
+class PodAllocator(LumorphAllocator):
+    """Pod-aware fragmentation-free allocation: rack-first placement.
+
+    A tenant that fits in one rack never crosses a rail: among racks with
+    enough free chips, the *best-fit* rack (fewest free chips ≥ k) takes
+    it, preserving the larger holes for future pod-scale tenants.  A
+    tenant wider than any single rack's free set spans the minimal number
+    of racks; when its size divides evenly across them, each spanned rack
+    gets an equal share — the shard-alignment condition under which the
+    hierarchical collective (``scheduler.compose_hierarchical``) is
+    admissible, so spanning tenants pay the rail tier as one inter-rack
+    stage instead of rail-bottlenecked flat rounds.  Within every rack
+    the densest-server-first packing applies unchanged.
+
+    ``span_racks=False`` confines every tenant to a single rack — the
+    isolated-racks baseline the pod benchmarks compare against.
+    """
+
+    def __init__(self, n_chips: int, chips_per_rack: int,
+                 tiles_per_server: int = 8, span_racks: bool = True):
+        super().__init__(n_chips, tiles_per_server)
+        if n_chips % chips_per_rack:
+            raise ValueError(
+                f"n_chips {n_chips} not a multiple of chips_per_rack {chips_per_rack}")
+        self.chips_per_rack = chips_per_rack
+        self.span_racks = span_racks
+
+    def allocate(self, tenant: str, k: int) -> Allocation:
+        if k <= 0:
+            raise ValueError("k must be positive")
+        if k > len(self.free):
+            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
+        by_rack = group_by_rack(self.free, self.chips_per_rack)
+        fits = [r for r, chips in by_rack.items() if len(chips) >= k]
+        if fits:  # rack-first: zero rail crossings, best-fit rack
+            rack = min(fits, key=lambda r: (len(by_rack[r]), r))
+            return self._commit(tenant, self._pack(by_rack[rack], k), k)
+        if not self.span_racks:
+            raise AllocationError(
+                f"{tenant}: want {k}, no single rack has that many free "
+                f"(rack-confined pod)")
+        # span the minimal number of racks (most-free racks first)
+        racks = sorted(by_rack, key=lambda r: (-len(by_rack[r]), r))
+        span, have = [], 0
+        for r in racks:
+            span.append(r)
+            have += len(by_rack[r])
+            if have >= k:
+                break
+        share, rem = divmod(k, len(span))
+        if rem == 0 and all(len(by_rack[r]) >= share for r in span):
+            # equal shares: the hierarchical collective is admissible
+            picked = [c for r in span for c in self._pack(by_rack[r], share)]
+        else:  # uneven free pools: greedy fill, still minimal rack count
+            picked = []
+            for r in span:
+                take = min(k - len(picked), len(by_rack[r]))
+                picked.extend(self._pack(by_rack[r], take))
+                if len(picked) == k:
+                    break
         return self._commit(tenant, picked, k)
 
 
@@ -221,6 +290,8 @@ class SipacAllocator(BaseAllocator):
 def make_allocator(kind: str, n_chips: int, **kw) -> BaseAllocator:
     if kind == "lumorph":
         return LumorphAllocator(n_chips, **kw)
+    if kind == "pod":
+        return PodAllocator(n_chips, **kw)
     if kind == "torus":
         dims = kw.pop("dims", None)
         if dims is None:

@@ -38,6 +38,15 @@ MZI_RECONFIG_DELAY = 3.7e-6  # s
 TPU_ICI_BW = 50e9  # bytes/s
 TPU_ALPHA = 1.0e-6  # s (ICI per-hop launch cost, same order as NVLink's)
 
+#: Inter-rack photonic rail parameters (pod tier; "Photonic Rails"-style
+#: fabrics).  A rail is an 800G-class fiber pair between two racks: lower
+#: bandwidth than an on-board NVLink-class port, a longer electrical +
+#: optical path (higher α), and a rack-scale optical circuit switch that
+#: reprograms more slowly than the on-wafer MZI mesh.
+POD_RAIL_BW = 100e9  # bytes/s per rail, per direction
+POD_RAIL_ALPHA = 1.2e-6  # s
+RAIL_RECONFIG_DELAY = 25e-6  # s, rack-tier OCS reprogramming window
+
 
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
@@ -62,6 +71,11 @@ IDEAL_SWITCH = LinkModel(alpha=PAPER_ALPHA, bw=PAPER_LINK_BW, reconfig=0.0, name
 LUMORPH_LINK = LinkModel(alpha=PAPER_ALPHA, bw=PAPER_LINK_BW, reconfig=MZI_RECONFIG_DELAY, name="lumorph")
 #: TPU v5e ICI link for deployment-target pricing.
 TPU_LINK = LinkModel(alpha=TPU_ALPHA, bw=TPU_ICI_BW, reconfig=0.0, name="tpu-ici")
+#: Inter-rack photonic rail: the pod tier's link.  Rounds that cross racks
+#: are priced with this model (bottleneck link of the round) and time-share
+#: the per-rack-pair rail budget — see ``Schedule.cost`` with a ``Pod``.
+POD_RAIL_LINK = LinkModel(alpha=POD_RAIL_ALPHA, bw=POD_RAIL_BW,
+                          reconfig=RAIL_RECONFIG_DELAY, name="pod-rail")
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ class Circuit:
     wavelength: int
     circuit_id: int
     via_fiber: Optional[int] = None  # fiber index when crossing servers
+    via_rail: Optional[int] = None  # rail index when crossing racks (pod tier)
 
 
 class CircuitError(RuntimeError):
@@ -111,6 +112,30 @@ class LightpathFabric:
         self._tx_in_use = [0] * self.n_tiles
         self._rx_in_use = [0] * self.n_tiles
         self._lambda_in_use = [set() for _ in range(self.n_tiles)]
+
+
+def validate_endpoint_limits(tx: dict[int, int], rx: dict[int, int],
+                             banks: int, wavelengths: int) -> None:
+    """Per-chip degree limits of one round: TX/RX count ≤ TRX banks,
+    TX count ≤ wavelength budget.  Shared by the rack- and pod-tier dry
+    checks so a tightened rule applies to both."""
+    for chip, n in tx.items():
+        if n > banks:
+            raise CircuitError(f"chip {chip} needs {n} TX circuits > {banks} TRX banks")
+        if n > wavelengths:
+            raise CircuitError(f"chip {chip} needs {n} wavelengths > {wavelengths}")
+    for chip, n in rx.items():
+        if n > banks:
+            raise CircuitError(f"chip {chip} needs {n} RX circuits > {banks} TRX banks")
+
+
+def validate_shared_budget(per_pair: dict[tuple[int, int], int], budget: int,
+                           noun: str, medium: str) -> None:
+    """Shared-medium budget of one round (fibers per server pair, rails
+    per rack pair): peak demand on any pair must fit the pool."""
+    for key, n in per_pair.items():
+        if n > budget:
+            raise CircuitError(f"{noun} {key} need {n} {medium} > {budget}")
 
 
 class LumorphRack:
@@ -228,21 +253,11 @@ class LumorphRack:
             if s_srv != d_srv:
                 key = (min(s_srv, d_srv), max(s_srv, d_srv))
                 fibers[key] = fibers.get(key, 0) + 1
-        banks = self.servers[0].trx_banks_per_tile
-        wls = self.servers[0].wavelengths_per_tile
-        for chip, n in tx.items():
-            if n > banks:
-                raise CircuitError(f"chip {chip} needs {n} TX circuits > {banks} TRX banks")
-            if n > wls:
-                raise CircuitError(f"chip {chip} needs {n} wavelengths > {wls}")
-        for chip, n in rx.items():
-            if n > banks:
-                raise CircuitError(f"chip {chip} needs {n} RX circuits > {banks} TRX banks")
+        validate_endpoint_limits(tx, rx, self.servers[0].trx_banks_per_tile,
+                                 self.servers[0].wavelengths_per_tile)
         if check_fibers:
-            for key, n in fibers.items():
-                if n > self.fibers_per_server_pair:
-                    raise CircuitError(
-                        f"servers {key} need {n} fibers > {self.fibers_per_server_pair}")
+            validate_shared_budget(fibers, self.fibers_per_server_pair,
+                                   "servers", "fibers")
 
     def feasible_round(self, pairs: list[tuple[int, int]],
                        check_fibers: bool = True) -> bool:

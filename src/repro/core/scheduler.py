@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.cost_model import LinkModel, mixed_radix_factorization
 from repro.core.fabric import LumorphRack
+from repro.core.rack import Pod, group_by_rack
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -65,6 +66,11 @@ class Round:
     egress_fanout: int = 1
     #: execution lowering: one ppermute per entry (rank space)
     transfers: tuple[Transfer, ...] = ()
+    #: fabric tier the round was *planned* for: 0 = intra-rack, 1 = the
+    #: inter-rack rail stage of a hierarchical composition.  Pricing does
+    #: not trust the tag — it re-derives the tier from the pod geometry —
+    #: but the tag lets consumers decompose hierarchical programs.
+    tier: int = 0
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -88,37 +94,83 @@ class Schedule:
             prev = cur
         return count
 
-    def cost(self, link: LinkModel, rack: Optional[LumorphRack] = None) -> float:
-        """Total α–β time: per round, α (+ reconfig if circuits changed) +
-        serialized egress bytes × β.
+    def _priced_rounds(self, link: LinkModel,
+                       rack: "Optional[LumorphRack | Pod]" = None):
+        """Yield ``(tier, seconds)`` per round under the α–β model.
 
-        With ``rack``, inter-server fiber contention is charged: a round
-        whose peak per-server-pair circuit count exceeds the rack's fiber
-        budget must time-share fibers, stretching its β term by
-        ``ceil(demand / fibers)``.  MZIs for all sub-batches are programmed
-        in one window, so α is not stretched.  Placement quality (see
-        :func:`order_for_locality`) shows up directly in this price.
+        Per round: α of the governing link (+ its reconfig if the circuit
+        set changed) + serialized egress bytes × β.  With a rack, fiber
+        shortage stretches the intra-rack β term by ``ceil(demand /
+        fibers)``; with a :class:`~repro.core.rack.Pod`, rounds whose
+        circuits cross racks are additionally governed by the pod's rail
+        link: their α/reconfig come from the rail tier and their β term
+        is the *bottleneck* of the intra path and the rail path (rail
+        demand time-shares ``rails_per_rack_pair`` the same way fibers
+        do).  The tier yielded is derived from the geometry (1 = crosses
+        racks), not from the round's tag.
         """
-        total = 0.0
+        pod = rack if isinstance(rack, Pod) else None
+        cpr = pod.chips_per_rack if pod is not None else None
         prev: frozenset = frozenset()
         for r in self.rounds:
             cur = frozenset(r.pairs)
-            total += link.round_alpha(cur != prev)
+            changed = cur != prev
+            prev = cur
+            crossing = pod is not None and any(
+                s // cpr != d // cpr for s, d in r.pairs)
+            rail = pod.rail_link if crossing else None
+            governing = rail if crossing else link
+            seconds = governing.round_alpha(changed)
             stretch = 1
             if rack is not None:
-                demand = _round_fiber_demand(r.pairs, rack.tiles_per_server)
+                demand = _round_fiber_demand(r.pairs, rack.tiles_per_server,
+                                             chips_per_rack=cpr)
                 if demand > rack.fibers_per_server_pair:
                     stretch = -(-demand // rack.fibers_per_server_pair)
-            total += r.bytes_per_circuit * r.egress_fanout * link.beta * stretch
-            prev = cur
-        return total
+            beta_s = r.bytes_per_circuit * r.egress_fanout * link.beta * stretch
+            if crossing:
+                rail_stretch = 1
+                demand = _round_rail_demand(r.pairs, cpr)
+                if demand > pod.rails_per_rack_pair:
+                    rail_stretch = -(-demand // pod.rails_per_rack_pair)
+                beta_s = max(beta_s, r.bytes_per_circuit * r.egress_fanout
+                             * rail.beta * rail_stretch)
+            yield (1 if crossing else 0), seconds + beta_s
 
-    def validate(self, rack: LumorphRack, check_fibers: bool = True) -> None:
-        """Check every round against the rack's photonic limits.
+    def cost(self, link: LinkModel,
+             rack: "Optional[LumorphRack | Pod]" = None) -> float:
+        """Total α–β time of the program (see :meth:`_priced_rounds`).
 
-        ``check_fibers=False`` skips the per-server-pair fiber budget —
-        used by callers that model fiber shortage as time-sharing (see
-        :meth:`cost` with ``rack``) instead of infeasibility.
+        Placement quality (:func:`order_for_locality`) and — on a pod —
+        rack spanning show up directly in this price: fiber and rail
+        shortages are charged as β time-sharing, and any round that
+        crosses racks runs at the rail tier's slower link parameters.
+        MZIs for all sub-batches are programmed in one window, so α is
+        never stretched.
+        """
+        return sum(s for _, s in self._priced_rounds(link, rack))
+
+    def cost_by_tier(self, link: LinkModel,
+                     rack: "Optional[LumorphRack | Pod]" = None) -> dict[int, float]:
+        """Decompose :meth:`cost` into per-tier totals (0 = intra-rack
+        rounds, 1 = rounds crossing racks).  ``sum(result.values())``
+        equals :meth:`cost` — the pod property tests pin this so pricing
+        and its decomposition cannot drift apart."""
+        out: dict[int, float] = {}
+        for tier, s in self._priced_rounds(link, rack):
+            out[tier] = out.get(tier, 0.0) + s
+        return out
+
+    def validate(self, rack: "LumorphRack | Pod",
+                 check_fibers: bool = True) -> None:
+        """Check every round against the fabric's photonic limits (a rack
+        or a pod — pods additionally enforce the rail budget when
+        ``check_fibers`` is on).
+
+        ``check_fibers=False`` skips the shared-medium budgets (fibers,
+        and rails on a pod) — used by callers that model shortage as
+        time-sharing (see :meth:`cost` with ``rack``) instead of
+        infeasibility.
         """
         for i, r in enumerate(self.rounds):
             try:
@@ -128,13 +180,33 @@ class Schedule:
 
 
 def _round_fiber_demand(pairs: Sequence[tuple[int, int]],
-                        tiles_per_server: int) -> int:
-    """Peak circuits any one server pair must carry for this round."""
+                        tiles_per_server: int,
+                        chips_per_rack: Optional[int] = None) -> int:
+    """Peak circuits any one server pair must carry for this round.
+
+    With ``chips_per_rack``, circuits that cross racks are excluded —
+    they ride the pod's rails (see :func:`_round_rail_demand`), not the
+    intra-rack server-pair fibers.
+    """
     per_pair: dict[tuple[int, int], int] = {}
     for s, d in pairs:
+        if chips_per_rack is not None and s // chips_per_rack != d // chips_per_rack:
+            continue
         ss, ds = s // tiles_per_server, d // tiles_per_server
         if ss != ds:
             key = (min(ss, ds), max(ss, ds))
+            per_pair[key] = per_pair.get(key, 0) + 1
+    return max(per_pair.values()) if per_pair else 0
+
+
+def _round_rail_demand(pairs: Sequence[tuple[int, int]],
+                       chips_per_rack: int) -> int:
+    """Peak circuits any one *rack* pair must carry for this round."""
+    per_pair: dict[tuple[int, int], int] = {}
+    for s, d in pairs:
+        sr, dr = s // chips_per_rack, d // chips_per_rack
+        if sr != dr:
+            key = (min(sr, dr), max(sr, dr))
             per_pair[key] = per_pair.get(key, 0) + 1
     return max(per_pair.values()) if per_pair else 0
 
@@ -391,6 +463,171 @@ def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
                     n_bytes=bytes_per_move, n_chunks=1)
 
 
+# ---------------------------------------------------------------------------
+# hierarchical (pod-tier) composition
+# ---------------------------------------------------------------------------
+
+def _split_phases(sched: Schedule) -> tuple[list[Round], list[Round]]:
+    """Split an ALLREDUCE schedule into its reduce-scatter prefix and
+    all-gather suffix.  Every builder in this module emits that shape;
+    anything else (interleaved phases, rounds without transfers) cannot
+    anchor a hierarchical composition and raises."""
+    rs: list[Round] = []
+    ag: list[Round] = []
+    for r in sched.rounds:
+        if not r.transfers:
+            raise ValueError(
+                f"{sched.algo}: round without a transfer lowering cannot be composed")
+        flags = {t.reduce for t in r.transfers}
+        if len(flags) != 1:
+            raise ValueError(f"{sched.algo}: mixed reduce/overwrite round")
+        if flags == {True}:
+            if ag:
+                raise ValueError(f"{sched.algo}: reduce round after all-gather began")
+            rs.append(r)
+        else:
+            ag.append(r)
+    return rs, ag
+
+
+def _expand_chunks(ids: np.ndarray, factor: int) -> np.ndarray:
+    """Re-index chunk tables from granularity ``k`` to ``k·factor``: chunk
+    ``c`` becomes the sub-chunks ``c·factor .. c·factor+factor−1``."""
+    out = ids.astype(np.int64)[:, :, None] * factor + np.arange(factor)
+    return out.reshape(ids.shape[0], -1).astype(np.int32)
+
+
+def _merge_racks(rounds_by_rack: Sequence[Round], m: int, factor: int) -> Round:
+    """One pod-wide round from structurally identical per-rack rounds: all
+    racks run their local round simultaneously.  Rank spaces concatenate
+    (rack ``r``'s local rank ``i`` → global rank ``r·m + i``) and chunk
+    ids expand to the composed schedule's finer granularity."""
+    r0 = rounds_by_rack[0]
+    if any(len(r.transfers) != len(r0.transfers) for r in rounds_by_rack):
+        raise ValueError("per-rack rounds disagree on transfer structure")
+    pairs = tuple(p for rnd in rounds_by_rack for p in rnd.pairs)
+    transfers = []
+    for u in range(len(r0.transfers)):
+        perm = tuple((r * m + s, r * m + d)
+                     for r, rnd in enumerate(rounds_by_rack)
+                     for s, d in rnd.transfers[u].perm)
+        send = np.vstack([_expand_chunks(rnd.transfers[u].send, factor)
+                          for rnd in rounds_by_rack])
+        recv = np.vstack([_expand_chunks(rnd.transfers[u].recv, factor)
+                          for rnd in rounds_by_rack])
+        transfers.append(Transfer(perm, send, recv, r0.transfers[u].reduce))
+    return Round(pairs=pairs, bytes_per_circuit=r0.bytes_per_circuit,
+                 egress_fanout=r0.egress_fanout, transfers=tuple(transfers))
+
+
+def compose_hierarchical(intra: Sequence[Schedule],
+                         inter: str = "ring") -> Schedule:
+    """Stitch per-rack Schedules into one pod-wide ALLREDUCE program.
+
+    ``intra`` holds one schedule per rack — all built by the *same*
+    builder over the *same* participant count ``m`` on disjoint chips, so
+    after their reduce-scatter prefix, corresponding local ranks own the
+    same chunk region (the symmetry the inter stage relies on; it is
+    asserted, not assumed).  The composed program is:
+
+      1. every rack runs its reduce-scatter rounds simultaneously
+         (merged rank spaces, chunk ids refined ``R``-fold);
+      2. an **inter-rack stage** (``inter="ring"``): each of the ``m``
+         shard-owner groups — local rank ``i`` of every rack — ring
+         reduce-scatters then all-gathers its owned region across the
+         ``R`` racks in ``2(R−1)`` rounds of ``n/(m·R)``-byte sub-chunks,
+         all groups in parallel (``m`` circuits per rack pair per round,
+         tagged ``tier=1`` and priced at the rail link);
+      3. every rack runs its all-gather rounds simultaneously.
+
+    The result is an ordinary :class:`Schedule`: `compile_schedule` can
+    execute it, :meth:`Schedule.cost` prices it per tier against a
+    :class:`~repro.core.rack.Pod`, and the simulator treats it like any
+    other candidate algorithm.
+    """
+    intra = tuple(intra)
+    if not intra:
+        raise ValueError("compose_hierarchical needs ≥ 1 per-rack schedule")
+    if len(intra) == 1:
+        return intra[0]
+    if inter != "ring":
+        raise ValueError(f"unsupported inter-rack stage {inter!r}; have ['ring']")
+    first = intra[0]
+    m = len(first.participants)
+    for s in intra[1:]:
+        if (s.algo != first.algo or len(s.participants) != m
+                or s.n_bytes != first.n_bytes or s.n_chunks != first.n_chunks):
+            raise ValueError(
+                "hierarchical composition needs structurally identical "
+                "per-rack schedules (same algorithm, width, bytes)")
+    if m > 1 and first.n_chunks != m:
+        raise ValueError(
+            f"intra algorithm {first.algo!r} does not scatter the buffer "
+            f"(n_chunks={first.n_chunks}); use ring/lumorph2/lumorph4")
+    chips = tuple(c for s in intra for c in s.participants)
+    if len(set(chips)) != len(chips):
+        raise ValueError("per-rack schedules share chips")
+    R = len(intra)
+    K = first.n_chunks * R
+    splits = [_split_phases(s) for s in intra]
+    if (len({len(rs) for rs, _ in splits}) != 1
+            or len({len(ag) for _, ag in splits}) != 1):
+        raise ValueError("per-rack schedules disagree on phase structure")
+    rounds: list[Round] = []
+    for j in range(len(splits[0][0])):  # simultaneous per-rack reduce-scatter
+        rounds.append(_merge_racks([splits[r][0][j] for r in range(R)], m, R))
+    # chunk region each local rank owns after its rack's reduce-scatter:
+    # the last reduce round's recv row (what the rank accumulated last) —
+    # identical across racks by builder symmetry, asserted here
+    if splits[0][0]:
+        own = np.asarray(splits[0][0][-1].transfers[0].recv, dtype=np.int64)
+        for rs, _ in splits[1:]:
+            if not np.array_equal(rs[-1].transfers[0].recv, own):
+                raise ValueError("per-rack reduce-scatters own different regions")
+    else:  # m == 1: the single local rank owns the whole (1-chunk) buffer
+        own = np.zeros((m, 1), dtype=np.int64)
+    w = own.shape[1]
+    perm = tuple((r * m + i, ((r + 1) % R) * m + i)
+                 for r in range(R) for i in range(m))
+    pairs = tuple((chips[s], chips[d]) for s, d in perm)
+    sub_bytes = first.n_bytes / K
+    for t in range(R - 1):  # inter reduce-scatter (ring over racks)
+        send = np.vstack([own * R + (r - t) % R for r in range(R)]).astype(np.int32)
+        recv = np.vstack([own * R + (r - t - 1) % R for r in range(R)]).astype(np.int32)
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=w * sub_bytes, tier=1,
+                            transfers=(Transfer(perm, send, recv, reduce=True),)))
+    for t in range(R - 1):  # inter all-gather (mirror; same circuits)
+        send = np.vstack([own * R + (r + 1 - t) % R for r in range(R)]).astype(np.int32)
+        recv = np.vstack([own * R + (r - t) % R for r in range(R)]).astype(np.int32)
+        rounds.append(Round(pairs=pairs, bytes_per_circuit=w * sub_bytes, tier=1,
+                            transfers=(Transfer(perm, send, recv, reduce=False),)))
+    for j in range(len(splits[0][1])):  # simultaneous per-rack all-gather
+        rounds.append(_merge_racks([splits[r][1][j] for r in range(R)], m, R))
+    return Schedule(f"hier:{first.algo}:{inter}", chips, tuple(rounds),
+                    first.n_bytes, n_chunks=K)
+
+
+def hierarchical_schedule(chips: Sequence[int], n_bytes: float,
+                          chips_per_rack: int, intra: str = "lumorph4",
+                          inter: str = "ring") -> Schedule:
+    """Build a hierarchical ALLREDUCE over chips spanning racks: group the
+    chips by rack (order preserved — feed locality-ordered chips), build
+    the ``intra`` algorithm per rack, and compose with the ``inter``
+    stage.  Racks must hold equal shares (the shard-alignment condition);
+    a single-rack chip set degenerates to the flat ``intra`` schedule.
+    """
+    groups = group_by_rack(chips, chips_per_rack)
+    if len({len(g) for g in groups.values()}) != 1:
+        raise ValueError(
+            f"hierarchical schedule needs equal per-rack shares, got "
+            f"{sorted((r, len(g)) for r, g in groups.items())}")
+    if len(groups) == 1:
+        return build_schedule(intra, tuple(chips), n_bytes)
+    return compose_hierarchical(
+        [build_schedule(intra, tuple(g), n_bytes) for g in groups.values()],
+        inter)
+
+
 SCHEDULE_BUILDERS = {
     "ring": ring_schedule,
     "lumorph2": rhd_schedule,
@@ -407,32 +644,82 @@ def build_schedule(algo: str, chips: Sequence[int], n_bytes: float) -> Schedule:
     return builder(chips, n_bytes)
 
 
+def build_any_schedule(algo: str, chips: Sequence[int], n_bytes: float,
+                       chips_per_rack: Optional[int] = None) -> Schedule:
+    """:func:`build_schedule` extended with the pod tier's virtual
+    algorithms: ``"hier:<intra>"`` builds :func:`hierarchical_schedule`
+    with ``<intra>`` inside each rack and the ring inter-rack stage."""
+    if algo.startswith("hier:"):
+        if chips_per_rack is None:
+            raise ValueError(f"{algo!r} needs chips_per_rack (pod geometry)")
+        return hierarchical_schedule(chips, n_bytes, chips_per_rack,
+                                     intra=algo.split(":", 1)[1])
+    return build_schedule(algo, chips, n_bytes)
+
+
+def candidate_algos(algos: Sequence[str], chips: Sequence[int],
+                    chips_per_rack: Optional[int] = None) -> tuple[str, ...]:
+    """The algorithms admissible on this concrete chip set: the flat ones
+    as given, plus one ``"hier:<intra>"`` candidate per flat algorithm
+    when the chips span ≥ 2 racks in equal shares (the shard-alignment
+    condition of :func:`compose_hierarchical`; ``tree`` cannot anchor a
+    composition and gets no hierarchical variant)."""
+    cands = tuple(algos)
+    if chips_per_rack is None:
+        return cands
+    groups = group_by_rack(chips, chips_per_rack)
+    if len(groups) >= 2 and len({len(g) for g in groups.values()}) == 1:
+        cands += tuple(f"hier:{a}" for a in algos if a != "tree")
+    return cands
+
+
 # ---------------------------------------------------------------------------
 # fiber-aware placement
 # ---------------------------------------------------------------------------
 
-def fiber_demand(schedule: Schedule, tiles_per_server: int) -> int:
-    """Peak per-server-pair fiber demand across the schedule's rounds."""
+def fiber_demand(schedule: Schedule, tiles_per_server: int,
+                 chips_per_rack: Optional[int] = None) -> int:
+    """Peak per-server-pair fiber demand across the schedule's rounds
+    (cross-rack circuits excluded when ``chips_per_rack`` is given)."""
     peak = 0
     for r in schedule.rounds:
-        peak = max(peak, _round_fiber_demand(r.pairs, tiles_per_server))
+        peak = max(peak, _round_fiber_demand(r.pairs, tiles_per_server,
+                                             chips_per_rack=chips_per_rack))
+    return peak
+
+
+def rail_demand(schedule: Schedule, chips_per_rack: int) -> int:
+    """Peak per-rack-pair rail demand across the schedule's rounds."""
+    peak = 0
+    for r in schedule.rounds:
+        peak = max(peak, _round_rail_demand(r.pairs, chips_per_rack))
     return peak
 
 
 def order_for_locality(chips: Sequence[int], tiles_per_server: int,
-                       radix: int = 4) -> list[int]:
+                       radix: int = 4,
+                       chips_per_rack: Optional[int] = None) -> list[int]:
     """Reorder a tenant's chips so low-stride (frequent, intra-group)
     collective rounds stay inside servers and only high-stride rounds cross
-    fibers: sort by server, then fill digit groups server-by-server.
+    fibers: sort by server, then fill digit groups server-by-server.  With
+    ``chips_per_rack``, racks are grouped first (densest rack's chips
+    contiguous), so rack crossings are pushed to the highest strides —
+    and the per-rack groups line up for :func:`hierarchical_schedule`.
 
     For LUMORPH-2/4 the partner maps are index-arithmetic over the chip
     *list*, so placement is free — this is the software knob the photonic
     fabric gives us that a fixed torus does not (paper §3).
     """
+    if chips_per_rack is not None:
+        by_rack = group_by_rack(chips, chips_per_rack)
+        out: list[int] = []
+        for rk in sorted(by_rack, key=lambda r: (-len(by_rack[r]), r)):
+            out.extend(order_for_locality(by_rack[rk], tiles_per_server, radix))
+        return out
     by_server: dict[int, list[int]] = {}
     for c in chips:
         by_server.setdefault(c // tiles_per_server, []).append(c)
-    out: list[int] = []
+    out = []
     for srv in sorted(by_server, key=lambda s: -len(by_server[s])):
         out.extend(sorted(by_server[srv]))
     return out

@@ -31,6 +31,7 @@ from typing import Optional, Sequence
 
 from repro.core.cost_model import LinkModel
 from repro.core.fabric import LumorphRack
+from repro.core.rack import Pod, group_by_rack
 from repro.core.scheduler import Schedule, transfer_schedule
 
 #: plan kinds
@@ -78,14 +79,20 @@ class MorphPlan:
     def n_moves(self) -> int:
         return len(self.moves)
 
-    def cost(self, link: LinkModel, rack: Optional[LumorphRack] = None) -> MorphCost:
+    def cost(self, link: LinkModel,
+             rack: "Optional[LumorphRack | Pod]" = None) -> MorphCost:
         """MZI reconfigurations + state-move bytes, priced over
-        ``Schedule.cost`` (fiber time-sharing included when ``rack`` is
-        given), plus one final window to re-establish the tenant's
-        collective circuits on the morphed layout."""
+        ``Schedule.cost`` (fiber/rail time-sharing included when ``rack``
+        is given), plus one final window to re-establish the tenant's
+        collective circuits on the morphed layout — the slower rail OCS
+        window when the morphed slice spans racks, since its collective
+        circuits then include rail circuits."""
         move_s = self.schedule.cost(link, rack=rack)
+        reestablish = link.reconfig
+        if isinstance(rack, Pod):
+            reestablish = rack.reconfig_window(self.new_chips, reestablish)
         return MorphCost(move_s=move_s,
-                         reestablish_s=link.reconfig,
+                         reestablish_s=reestablish,
                          reconfig_windows=self.schedule.reconfigurations() + 1,
                          bytes_moved=self.state_bytes * len(self.moves))
 
@@ -150,17 +157,53 @@ class MorphPlan:
 # ---------------------------------------------------------------------------
 
 def pack_layout(chips: Sequence[int], free: Sequence[int],
-                tiles_per_server: int) -> tuple[int, ...]:
+                tiles_per_server: int,
+                chips_per_rack: Optional[int] = None) -> tuple[int, ...]:
     """Densest-server-first target layout for a ``len(chips)``-sized slice
     drawing on ``chips ∪ free``.
 
     Mirrors ``LumorphAllocator``'s admission-time packing, but breaks ties
     toward chips the tenant already holds so a compaction plan moves as
-    little state as possible.
+    little state as possible.  With ``chips_per_rack`` (pod morphs) racks
+    are filled one at a time — tenant-occupied, candidate-dense racks
+    first — so a compaction prefers same-rack remaps and shrinks the rack
+    span before the server span (state over rails is the expensive move).
     """
     k = len(chips)
     owned = set(chips)
     candidates = owned | set(free)
+    if chips_per_rack is not None:
+        by_rack = group_by_rack(candidates, chips_per_rack)
+        # a single rack that can host the whole slice wins outright: rack
+        # span 1 frees every future step from rail pricing.  Prefer the
+        # rack holding the most tenant chips (fewest cross-rack state
+        # moves) — whether those moves pay off is the *policy's* call
+        # (strict gain + amortization over the priced plan).
+        hosts = [r for r in by_rack if len(by_rack[r]) >= k]
+        if hosts:
+            best = min(hosts, key=lambda r: (
+                -sum(1 for c in by_rack[r] if c in owned),
+                -len(by_rack[r]), r))
+            return tuple(sorted(
+                _pack_one_rack(by_rack[best], owned, k, tiles_per_server)))
+        rack_order = sorted(
+            by_rack,
+            key=lambda r: (-sum(1 for c in by_rack[r] if c in owned),
+                           -len(by_rack[r]), r))
+        picked: list[int] = []
+        for rk in rack_order:
+            room = k - len(picked)
+            if room <= 0:
+                break
+            picked.extend(_pack_one_rack(by_rack[rk], owned,
+                                         min(room, len(by_rack[rk])),
+                                         tiles_per_server))
+        return tuple(sorted(picked))
+    return tuple(sorted(_pack_one_rack(candidates, owned, k, tiles_per_server)))
+
+
+def _pack_one_rack(candidates, owned: set, k: int,
+                   tiles_per_server: int) -> list[int]:
     by_server: dict[int, list[int]] = {}
     for c in candidates:
         by_server.setdefault(c // tiles_per_server, []).append(c)
@@ -179,17 +222,25 @@ def pack_layout(chips: Sequence[int], free: Sequence[int],
         # within a server prefer owned chips (no state move), then low ids
         chips_here = sorted(by_server[srv], key=lambda c: (c not in owned, c))
         picked.extend(sorted(chips_here[:min(room, len(chips_here))]))
-    return tuple(sorted(picked))
+    return picked
 
 
 def _server_spans(chips: Sequence[int], tiles_per_server: int) -> int:
     return len({c // tiles_per_server for c in chips})
 
 
+def _rack_spans(chips: Sequence[int], chips_per_rack: Optional[int]) -> int:
+    if chips_per_rack is None:
+        return 1
+    return len({c // chips_per_rack for c in chips})
+
+
 def _match_moves(leaving: Sequence[int], entering: Sequence[int],
-                 tiles_per_server: int) -> list[tuple[int, int]]:
+                 tiles_per_server: int,
+                 chips_per_rack: Optional[int] = None) -> list[tuple[int, int]]:
     """Pair each leaving chip with an entering chip, preferring moves that
-    stay inside one server (free: no fiber, no time-sharing)."""
+    stay inside one server (free: no fiber, no time-sharing), then inside
+    one rack (fiber, but no rail)."""
     leaving = sorted(leaving)
     entering = sorted(entering)
     moves: list[tuple[int, int]] = []
@@ -197,6 +248,9 @@ def _match_moves(leaving: Sequence[int], entering: Sequence[int],
     for src in leaving:
         srv = src // tiles_per_server
         same = [d for d in remaining if d // tiles_per_server == srv]
+        if not same and chips_per_rack is not None:
+            rk = src // chips_per_rack
+            same = [d for d in remaining if d // chips_per_rack == rk]
         dst = same[0] if same else remaining[0]
         remaining.remove(dst)
         moves.append((src, dst))
@@ -230,22 +284,30 @@ def _wave_split(moves: Sequence[tuple[int, int]],
 
 def plan_compaction(tenant: str, chips: Sequence[int], free: Sequence[int],
                     tiles_per_server: int, state_bytes: float,
-                    rack: Optional[LumorphRack] = None) -> Optional[MorphPlan]:
+                    rack: Optional[LumorphRack] = None,
+                    chips_per_rack: Optional[int] = None) -> Optional[MorphPlan]:
     """Plan remapping ``tenant``'s slice toward the densest-server-first
     layout reachable from the current free pool.
 
     Returns ``None`` when the tenant is already packed as tightly as the
-    free pool allows (no moves, or the target does not reduce the number
-    of servers spanned — span is what fiber pricing keys on)."""
-    target = pack_layout(chips, free, tiles_per_server)
+    free pool allows (no moves, or the target does not reduce the spans
+    pricing keys on — on a pod the rack span first, then the server
+    span; same-rack remaps are preferred because cross-rack state moves
+    ride the slower rails)."""
+    target = pack_layout(chips, free, tiles_per_server,
+                         chips_per_rack=chips_per_rack)
     old = tuple(sorted(chips))
     if target == old:
         return None
-    if _server_spans(target, tiles_per_server) >= _server_spans(old, tiles_per_server):
+    span = (_rack_spans(target, chips_per_rack),
+            _server_spans(target, tiles_per_server))
+    if span >= (_rack_spans(old, chips_per_rack),
+                _server_spans(old, tiles_per_server)):
         return None  # a sideways shuffle: no locality to gain
     leaving = sorted(set(old) - set(target))
     entering = sorted(set(target) - set(old))
-    moves = _match_moves(leaving, entering, tiles_per_server)
+    moves = _match_moves(leaving, entering, tiles_per_server,
+                         chips_per_rack=chips_per_rack)
     sched = transfer_schedule(_wave_split(moves, rack), state_bytes,
                               tag="morph-compaction")
     plan = MorphPlan(tenant=tenant, kind=COMPACTION, old_chips=old,
@@ -258,7 +320,8 @@ def plan_compaction(tenant: str, chips: Sequence[int], free: Sequence[int],
 def plan_bypass(tenant: str, chips: Sequence[int], dead: Sequence[int],
                 free: Sequence[int], tiles_per_server: int,
                 state_bytes: float,
-                rack: Optional[LumorphRack] = None) -> Optional[MorphPlan]:
+                rack: Optional[LumorphRack] = None,
+                chips_per_rack: Optional[int] = None) -> Optional[MorphPlan]:
     """Plan swapping ``dead`` chips out of ``tenant``'s slice for free
     replacements, replaying each lost shard from a surviving DP peer.
 
@@ -276,14 +339,22 @@ def plan_bypass(tenant: str, chips: Sequence[int], dead: Sequence[int],
     pool = sorted(set(free) - set(dead) - set(old))
     if not survivors:
         return None
-    # replacements: pack next to the survivors (their servers first,
-    # densest free server as the fallback)
+    # replacements: pack next to the survivors (their servers first, then
+    # their racks on a pod, densest free server as the fallback)
     surv_servers = {c // tiles_per_server for c in survivors}
+    surv_racks = ({c // chips_per_rack for c in survivors}
+                  if chips_per_rack is not None else set())
+
+    def _rack_of_server(s: int) -> int:
+        return (s * tiles_per_server) // chips_per_rack if chips_per_rack else 0
+
     by_server: dict[int, list[int]] = {}
     for c in pool:
         by_server.setdefault(c // tiles_per_server, []).append(c)
-    order = sorted(by_server, key=lambda s: (s not in surv_servers,
-                                             -len(by_server[s]), s))
+    order = sorted(by_server, key=lambda s: (
+        s not in surv_servers,
+        chips_per_rack is not None and _rack_of_server(s) not in surv_racks,
+        -len(by_server[s]), s))
     want = min(len(lost), len(pool))  # partial when the pool is short
     replacements: list[int] = []
     for srv in order:

@@ -23,7 +23,8 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.cost_model import LinkModel
 from repro.core.fabric import CircuitError, LumorphRack
-from repro.core.scheduler import build_schedule, order_for_locality
+from repro.core.scheduler import (build_any_schedule, candidate_algos,
+                                  order_for_locality)
 from repro.morph.plan import (MorphCost, MorphPlan, plan_bypass,
                               plan_compaction)
 
@@ -73,18 +74,28 @@ class MorphPolicy:
     def __init__(self, config: MorphConfig, rack: LumorphRack,
                  link: LinkModel, algos: Sequence[str],
                  tiles_per_server: int,
-                 price: Optional[PriceFn] = None):
+                 price: Optional[PriceFn] = None,
+                 chips_per_rack: Optional[int] = None):
         self.config = config
         self.rack = rack
         self.link = link
         self.algos = tuple(algos)
         self.tiles_per_server = tiles_per_server
+        #: pod morphs: rack granularity for same-rack-preferring targets
+        #: and hierarchical collective candidates (None = single rack)
+        self.chips_per_rack = chips_per_rack
         self._price = price or self._default_price
 
     # -- pricing -------------------------------------------------------------
     def _default_price(self, algo: str, chips: tuple[int, ...],
                        n_bytes: float) -> float:
-        sched = build_schedule(algo, chips, n_bytes)
+        try:
+            sched = build_any_schedule(algo, chips, n_bytes,
+                                       chips_per_rack=self.chips_per_rack)
+        except ValueError:
+            if not algo.startswith("hier:"):
+                raise  # a flat-builder bug must fail loudly, not price inf
+            return float("inf")  # hier inadmissible on this layout
         try:
             sched.validate(self.rack, check_fibers=False)
         except CircuitError:
@@ -94,12 +105,15 @@ class MorphPolicy:
     def step_cost(self, chips: Sequence[int], width: int,
                   n_bytes: float) -> float:
         """Cheapest admissible per-step ALLREDUCE on this concrete layout
-        (participants locality-ordered, exactly like the simulator)."""
+        (participants locality-ordered, hierarchical candidates included
+        for rack-spanning slices — exactly like the simulator)."""
         if width <= 1:
             return 0.0
         ordered = tuple(order_for_locality(tuple(chips)[:width],
-                                           self.tiles_per_server))
-        return min(self._price(a, ordered, n_bytes) for a in self.algos)
+                                           self.tiles_per_server,
+                                           chips_per_rack=self.chips_per_rack))
+        algos = candidate_algos(self.algos, ordered, self.chips_per_rack)
+        return min(self._price(a, ordered, n_bytes) for a in algos)
 
     def _state_bytes(self, coll_bytes: float) -> float:
         return (self.config.state_bytes if self.config.state_bytes is not None
@@ -116,7 +130,8 @@ class MorphPolicy:
         if not self.config.compaction or remaining_steps <= 0:
             return None
         plan = plan_compaction(tenant, chips, free, self.tiles_per_server,
-                               self._state_bytes(coll_bytes), rack=self.rack)
+                               self._state_bytes(coll_bytes), rack=self.rack,
+                               chips_per_rack=self.chips_per_rack)
         if plan is None:
             return None
         old_s = self.step_cost(plan.old_chips, width, coll_bytes)
@@ -139,7 +154,8 @@ class MorphPolicy:
         if not self.config.bypass:
             return None
         plan = plan_bypass(tenant, chips, dead, free, self.tiles_per_server,
-                           self._state_bytes(coll_bytes), rack=self.rack)
+                           self._state_bytes(coll_bytes), rack=self.rack,
+                           chips_per_rack=self.chips_per_rack)
         if plan is None:
             return None
         old_s = self.step_cost(plan.old_chips, width, coll_bytes)

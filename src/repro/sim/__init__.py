@@ -20,10 +20,11 @@ from repro.sim.engine import (Discipline, RackSimulator, compare,
                               make_discipline, simulate)
 from repro.sim.metrics import SimMetrics, TenantRecord
 from repro.sim.workload import (FailureSpec, JobSpec, Trace, fig2a_trace,
-                                poisson_trace)
+                                pod_churn_trace, poisson_trace)
 
 __all__ = [
     "Discipline", "RackSimulator", "compare", "make_discipline", "simulate",
     "SimMetrics", "TenantRecord",
-    "FailureSpec", "JobSpec", "Trace", "fig2a_trace", "poisson_trace",
+    "FailureSpec", "JobSpec", "Trace", "fig2a_trace", "pod_churn_trace",
+    "poisson_trace",
 ]

@@ -52,9 +52,11 @@ from typing import Optional, Sequence
 
 from repro.core import cost_model as cm
 from repro.core.allocator import (AllocationError, BaseAllocator,
-                                  make_allocator)
+                                  PodAllocator, make_allocator)
 from repro.core.fabric import CircuitError, LumorphRack
-from repro.core.scheduler import build_schedule, order_for_locality
+from repro.core.rack import Pod
+from repro.core.scheduler import (build_any_schedule, candidate_algos,
+                                  order_for_locality)
 from repro.morph import MorphConfig, MorphPolicy, PricedMorph, apply_plan
 from repro.runtime.fault_tolerance import reallocate_after_failure
 from repro.sim.metrics import SimMetrics, TenantRecord
@@ -137,12 +139,33 @@ class RackSimulator:
                  n_chips: int = 64, check_invariants: bool = True,
                  tiles_per_server: int = 8,
                  fibers_per_server_pair: Optional[int] = None,
-                 morph: "MorphConfig | bool | None" = None):
+                 morph: "MorphConfig | bool | None" = None,
+                 n_racks: int = 1,
+                 rails_per_rack_pair: Optional[int] = None,
+                 span_racks: bool = True):
         if isinstance(discipline, str):
             discipline = make_discipline(discipline)
         self.discipline = discipline
         self.trace = trace
-        self.allocator = discipline.make_allocator(n_chips)
+        self.n_racks = n_racks
+        self.span_racks = span_racks
+        #: pod mode (``n_racks > 1``): rack granularity of the chip space;
+        #: None means the classic single-rack simulation
+        self.chips_per_rack: Optional[int] = None
+        if n_racks > 1:
+            if not discipline.photonic:
+                raise ValueError(
+                    "pod mode (n_racks > 1) needs a reconfigurable photonic "
+                    f"discipline, not {discipline.name!r}")
+            if n_chips % n_racks:
+                raise ValueError(
+                    f"n_chips {n_chips} not divisible into {n_racks} racks")
+            self.chips_per_rack = n_chips // n_racks
+            self.allocator: BaseAllocator = PodAllocator(
+                n_chips, self.chips_per_rack, tiles_per_server,
+                span_racks=span_racks)
+        else:
+            self.allocator = discipline.make_allocator(n_chips)
         self.n_chips = self.allocator.n_chips  # torus may round the request
         self.metrics = SimMetrics(self.n_chips)
         self.check_invariants = check_invariants
@@ -156,10 +179,19 @@ class RackSimulator:
             # fiber time-sharing; scattered placements can still exceed it
             fibers_per_server_pair = 4 * tiles_per_server
         #: photonic resource model the IR schedules are validated/priced on
-        self.rack = LumorphRack(
-            n_servers=max(1, math.ceil(self.n_chips / tiles_per_server)),
-            tiles_per_server=tiles_per_server,
-            fibers_per_server_pair=fibers_per_server_pair)
+        #: — a Pod in pod mode, so rail contention is charged as β
+        #: time-sharing and rounds crossing racks run at the rail link
+        if self.chips_per_rack is not None:
+            self.rack: "LumorphRack | Pod" = Pod(
+                n_racks=n_racks, chips_per_rack=self.chips_per_rack,
+                tiles_per_server=tiles_per_server,
+                fibers_per_server_pair=fibers_per_server_pair,
+                rails_per_rack_pair=rails_per_rack_pair)
+        else:
+            self.rack = LumorphRack(
+                n_servers=max(1, math.ceil(self.n_chips / tiles_per_server)),
+                tiles_per_server=tiles_per_server,
+                fibers_per_server_pair=fibers_per_server_pair)
         self._sched_cache: OrderedDict[tuple, float] = OrderedDict()
         #: online slice morphing (repro.morph): compaction on departure,
         #: bypass on failure.  Only meaningful on a reconfigurable photonic
@@ -172,7 +204,8 @@ class RackSimulator:
                                      link=self.discipline.link,
                                      algos=self.discipline.algos,
                                      tiles_per_server=tiles_per_server,
-                                     price=self._algo_cost)
+                                     price=self._algo_cost,
+                                     chips_per_rack=self.chips_per_rack)
         self.now = 0.0
         self.dead: set[int] = set()
         self._jobs: dict[str, _Job] = {}  # live (accepted, not departed)
@@ -258,9 +291,10 @@ class RackSimulator:
     # -- pricing -------------------------------------------------------------
     def _algo_cost(self, algo: str, chips: tuple[int, ...],
                    n_bytes: float) -> float:
-        """Price one algorithm on one concrete chip set via the Schedule IR
-        (photonic disciplines only): TRX-infeasible schedules are
-        inadmissible (``inf``), fiber shortage is charged as time-sharing.
+        """Price one algorithm (flat or ``hier:*``) on one concrete chip
+        set via the Schedule IR (photonic disciplines only):
+        TRX-infeasible schedules are inadmissible (``inf``), fiber — and
+        in pod mode rail — shortage is charged as time-sharing.
         LRU-cached — tenants re-price the same schedule every step.
         """
         key = (algo, chips, n_bytes)
@@ -268,12 +302,21 @@ class RackSimulator:
         if cached is not None:
             self._sched_cache.move_to_end(key)
             return cached
-        sched = build_schedule(algo, chips, n_bytes)
         try:
-            sched.validate(self.rack, check_fibers=False)
-            cost = sched.cost(self.discipline.link, rack=self.rack)
-        except CircuitError:
-            cost = float("inf")  # e.g. egress fanout > TRX banks
+            sched = build_any_schedule(algo, chips, n_bytes,
+                                       chips_per_rack=self.chips_per_rack)
+        except ValueError:
+            if not algo.startswith("hier:"):
+                raise  # a flat-builder bug must fail loudly, not price inf
+            # hier candidate went inadmissible (e.g. rack shares turned
+            # unequal after a re-slice)
+            cost = float("inf")
+        else:
+            try:
+                sched.validate(self.rack, check_fibers=False)
+                cost = sched.cost(self.discipline.link, rack=self.rack)
+            except CircuitError:
+                cost = float("inf")  # e.g. egress fanout > TRX banks
         self._sched_cache[key] = cost
         if len(self._sched_cache) > self.SCHED_CACHE_SIZE:
             self._sched_cache.popitem(last=False)
@@ -292,16 +335,29 @@ class RackSimulator:
                        for a in self.discipline.algos)
         # participants: the tenant's actual chips (overallocated padding
         # never joins the ALLREDUCE), locality-ordered so frequent
-        # low-stride rounds stay inside servers; memoized per (re)slice
+        # low-stride rounds stay inside servers (and, in pod mode, racks);
+        # memoized per (re)slice.  Rack-spanning slices with equal shares
+        # additionally price the hierarchical compositions.
         if job.ordered is None:
-            job.ordered = tuple(order_for_locality(job.chips[:p],
-                                                   self.tiles_per_server))
+            job.ordered = tuple(order_for_locality(
+                job.chips[:p], self.tiles_per_server,
+                chips_per_rack=self.chips_per_rack))
         chips = job.ordered
         cost = min(self._algo_cost(a, chips, job.spec.coll_bytes)
-                   for a in self.discipline.algos)
+                   for a in candidate_algos(self.discipline.algos, chips,
+                                            self.chips_per_rack))
         assert cost != float("inf"), \
             f"no admissible collective for {job.spec.tenant} on {chips}"
         return cost
+
+    def _reconfig_window(self, chips: Sequence[int]) -> float:
+        """The window to (re-)establish a slice's circuits: the slower
+        rail OCS window when the slice spans racks in pod mode (its
+        circuit set then includes rail circuits), else the link's own."""
+        reconf = self.discipline.link.reconfig
+        if reconf and isinstance(self.rack, Pod):
+            reconf = self.rack.reconfig_window(chips, reconf)
+        return reconf
 
     # -- handlers ------------------------------------------------------------
     def _on_arrival(self, spec: JobSpec) -> None:
@@ -319,8 +375,9 @@ class RackSimulator:
         self.metrics.tenants[spec.tenant] = rec
         job = _Job(spec=spec, rec=rec, chips=alloc.chips)
         self._jobs[spec.tenant] = job
-        # establish the slice's circuits: one MZI window on photonic fabrics
-        reconf = self.discipline.link.reconfig
+        # establish the slice's circuits: one MZI window on photonic
+        # fabrics (the slower rail OCS window for rack-spanning slices)
+        reconf = self._reconfig_window(alloc.chips)
         if reconf:
             self.metrics.on_reconfig(rec, reconf)
         self._push_job(self.now + reconf + spec.compute_s, _PHASE, job)
@@ -360,6 +417,17 @@ class RackSimulator:
         held = sum(len(a.chips) for a in self.allocator.allocations.values())
         return self.n_chips - held - len(self.allocator.free)
 
+    def _morph_pool(self, job: "_Job") -> set[int]:
+        """Free chips a morph may draw on for this tenant: everything,
+        unless the pod is rack-confined — then only the tenant's own
+        racks, so a bypass or compaction cannot silently turn a confined
+        tenant into a rack-spanning one (the allocator's invariant)."""
+        free = self.allocator.free
+        if self.chips_per_rack is not None and not self.span_racks:
+            racks = {c // self.chips_per_rack for c in job.chips}
+            free = {c for c in free if c // self.chips_per_rack in racks}
+        return free
+
     def _commit_morph(self, job: _Job, pm: PricedMorph) -> None:
         """Apply an endorsed plan: reassign chips under the conservation
         proofs, re-price future collectives on the new layout, and charge
@@ -392,7 +460,7 @@ class RackSimulator:
             pm = self.morph.propose_compaction(
                 tenant, job.chips, job.width, job.spec.coll_bytes,
                 remaining_steps=job.spec.steps - job.step,
-                free=sorted(self.allocator.free))
+                free=sorted(self._morph_pool(job)))
             if pm is not None:
                 self._commit_morph(job, pm)
 
@@ -421,7 +489,7 @@ class RackSimulator:
                     continue
                 pm = self.morph.propose_bypass(
                     tenant, job.chips, job.width, job.spec.coll_bytes,
-                    dead=sorted(lost), free=sorted(self.allocator.free - dead))
+                    dead=sorted(lost), free=sorted(self._morph_pool(job) - dead))
                 if pm is not None:
                     self._commit_morph(job, pm)
         victims = self.allocator.fail_chips(fresh)
@@ -447,12 +515,13 @@ class RackSimulator:
             # clears a shrink recorded by an earlier one
             job.rec.shrunk_to = (len(alloc.chips)
                                  if len(alloc.chips) < job.spec.chips else None)
-            # rebuilding circuits on the new slice costs one MZI window;
-            # the in-flight step restarts after it (checkpoint restore and
-            # parameter broadcast are priced by recovery_cost_model when a
-            # caller wants wall-clock recovery time — the rack-occupancy
-            # metrics here only need the window)
-            reconf = self.discipline.link.reconfig
+            # rebuilding circuits on the new slice costs one MZI window
+            # (rail OCS window for a rack-spanning slice); the in-flight
+            # step restarts after it (checkpoint restore and parameter
+            # broadcast are priced by recovery_cost_model when a caller
+            # wants wall-clock recovery time — the rack-occupancy metrics
+            # here only need the window)
+            reconf = self._reconfig_window(alloc.chips)
             if reconf:
                 self.metrics.on_reconfig(job.rec, reconf)
             if job.step >= job.spec.steps:
@@ -482,10 +551,15 @@ class RackSimulator:
 
 def simulate(kind: str, trace: Trace, n_chips: int = 64,
              check_invariants: bool = True,
-             morph: "MorphConfig | bool | None" = None) -> SimMetrics:
-    """Convenience wrapper: replay ``trace`` on discipline ``kind``."""
+             morph: "MorphConfig | bool | None" = None,
+             n_racks: int = 1, span_racks: bool = True,
+             rails_per_rack_pair: Optional[int] = None) -> SimMetrics:
+    """Convenience wrapper: replay ``trace`` on discipline ``kind``
+    (``n_racks > 1`` simulates a pod of racks joined by photonic rails)."""
     return RackSimulator(kind, trace, n_chips=n_chips,
-                         check_invariants=check_invariants, morph=morph).run()
+                         check_invariants=check_invariants, morph=morph,
+                         n_racks=n_racks, span_racks=span_racks,
+                         rails_per_rack_pair=rails_per_rack_pair).run()
 
 
 def compare(trace: Trace, kinds: Sequence[str] = ("lumorph", "torus", "sipac"),

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Callable, Iterable, Sequence
+from typing import Callable
 
 import numpy as np
 
@@ -180,6 +180,47 @@ def fig2a_trace(n_events: int = 2000, *, mean_lifetime: float = 60.0,
         while True:
             ft += rng.exponential(1.0 / failure_rate)
             if ft >= float(n_events):
+                break
+            chip = int(rng.randint(n_chips))
+            failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))
+    return Trace(tuple(jobs), tuple(failures))
+
+
+def pod_churn_trace(n_events: int = 200, *, n_chips: int = 128,
+                    chips_per_rack: int = 64, mean_lifetime: float = 60.0,
+                    arrival_every: float = 4.0, compute_s: float = 6.0,
+                    coll_bytes: float = float(4 << 20),
+                    failure_rate: float = 0.0, seed: int = 0) -> Trace:
+    """Fig 2a-style churn scaled to a pod: the request mix spans sub-rack
+    fractions up to **multi-rack** tenants (1.5× and 2× ``chips_per_rack``),
+    so rack-first placement, rail pricing, and hierarchical collectives
+    are all exercised by one trace.  Small tenants dominate (heavy-tailed
+    cluster reality); pod-scale ones are rare but present.  Like
+    :func:`fig2a_trace`, jobs are drawn before failures so a seed's
+    arrival sequence is identical at any failure rate.
+    """
+    rng = np.random.RandomState(seed)
+    fractions = (1 / 32, 1 / 16, 3 / 32, 1 / 8, 3 / 16, 1 / 4,
+                 3 / 8, 1 / 2, 3 / 4, 1.0, 3 / 2, 2.0)
+    sizes = tuple(min(n_chips, max(1, int(round(f * chips_per_rack))))
+                  for f in fractions)
+    weights = np.array([4, 4, 3, 3, 3, 3, 2, 2, 2, 2, 1, 1], dtype=float)
+    weights /= weights.sum()
+    jobs = []
+    for t in range(n_events):
+        k = int(sizes[rng.choice(len(sizes), p=weights)])
+        lifetime = float(int(rng.exponential(mean_lifetime)) + 1)
+        steps = max(1, int(round(lifetime / compute_s)))
+        jobs.append(JobSpec(tenant=f"t{t}", arrival=float(t) * arrival_every,
+                            chips=k, steps=steps, compute_s=compute_s,
+                            coll_bytes=coll_bytes))
+    failures = []
+    if failure_rate > 0:
+        horizon = float(n_events) * arrival_every
+        ft = 0.0
+        while True:
+            ft += rng.exponential(1.0 / failure_rate)
+            if ft >= horizon:
                 break
             chip = int(rng.randint(n_chips))
             failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))

@@ -1,0 +1,66 @@
+"""Golden-trace fixtures: frozen traces + the exact `SimMetrics.summary()`
+each engine configuration must reproduce **bit-for-bit**.
+
+The claim gates in `benchmarks/` only catch drift that flips an
+inequality; these fixtures catch *any* silent change to pricing, event
+ordering, morph decisions, or metric accounting.  The engine is fully
+deterministic (all randomness lives in the trace generators, floats are
+accumulated in a fixed event order), so exact equality is the contract.
+
+Regenerate — only after deliberately changing engine/pricing semantics —
+with::
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+and eyeball the diff of the JSON fixtures in review: every changed
+number is a behavior change you are signing off on.
+"""
+
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def scenarios():
+    """name → (trace, simulator kwargs).  Imports deferred so the test
+    module can load this file before deciding what to run."""
+    from repro.sim.workload import fig2a_trace, pod_churn_trace
+
+    fig2a = fig2a_trace(60, failure_rate=0.02, n_chips=64, seed=7)
+    pod = pod_churn_trace(60, n_chips=64, chips_per_rack=32,
+                          failure_rate=0.02, seed=3)
+    return {
+        "fig2a_small_static": (fig2a, dict(n_chips=64,
+                                           fibers_per_server_pair=2)),
+        "fig2a_small_morph": (fig2a, dict(n_chips=64,
+                                          fibers_per_server_pair=2,
+                                          morph=True)),
+        "pod_small_morph": (pod, dict(n_chips=64, n_racks=2, morph=True)),
+        "pod_small_confined": (pod, dict(n_chips=64, n_racks=2,
+                                         span_racks=False)),
+    }
+
+
+def run(name):
+    from repro.sim import RackSimulator
+
+    trace, kwargs = scenarios()[name]
+    return RackSimulator("lumorph", trace, **kwargs).run().summary()
+
+
+def main():
+    traces = {}
+    for name, (trace, _) in scenarios().items():
+        traces[id(trace)] = trace
+        with open(HERE / f"{name}.json", "w") as f:
+            json.dump(run(name), f, indent=2, sort_keys=True)
+            f.write("\n")
+    for i, trace in enumerate(traces.values()):
+        trace.save(HERE / f"trace_{i}.jsonl")
+    print(f"wrote {len(scenarios())} metric fixtures + "
+          f"{len(traces)} traces to {HERE}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,11 @@
 ordering, failure recovery, and trace round-trips."""
 
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model as cm
-from repro.sim import (RackSimulator, Trace, fig2a_trace, poisson_trace,
-                       simulate)
+from repro.sim import (RackSimulator, Trace, fig2a_trace, pod_churn_trace,
+                       poisson_trace, simulate)
 from repro.sim.workload import (FailureSpec, JobSpec,
                                 failure_injection_trace)
 
@@ -140,6 +141,40 @@ def test_trace_jsonl_roundtrip(tmp_path):
     path = tmp_path / "trace.jsonl"
     trace.save(path)
     assert Trace.load(path) == trace
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(0.005, 0.05))
+@settings(max_examples=20, deadline=None)
+def test_trace_jsonl_roundtrip_lossless(seed, failure_rate):
+    """Save/load is lossless for any generated trace: every JobSpec field
+    (arrival, steps, compute_s, coll_bytes — the implicit departure
+    schedule) and every FailureSpec survive exactly, including
+    full-precision float timestamps."""
+    for trace in (_trace(seed=seed, failure_rate=failure_rate),
+                  pod_churn_trace(40, n_chips=64, chips_per_rack=32,
+                                  failure_rate=failure_rate, seed=seed)):
+        back = Trace.from_jsonl(trace.to_jsonl())
+        assert back == trace  # frozen-dataclass equality: all fields
+        # double round-trip is byte-stable (canonical serialization)
+        assert back.to_jsonl() == trace.to_jsonl()
+
+
+def test_trace_roundtrip_preserves_failures_and_departures(tmp_path):
+    """A hand-built trace with awkward floats, multi-chip failure bursts,
+    and per-job departure parameters survives save/load field-for-field."""
+    trace = Trace(
+        jobs=(JobSpec("a", 0.1 + 0.2, 3, steps=7, compute_s=0.3,
+                      coll_bytes=12345.678),
+              JobSpec("b", 1e-9, 64, steps=1)),
+        failures=(FailureSpec(2.5000000001, (5,)),
+                  FailureSpec(7.0, (0, 1, 63))))
+    path = tmp_path / "t.jsonl"
+    trace.save(path)
+    back = Trace.load(path)
+    assert back == trace
+    assert back.jobs[0].arrival == 0.1 + 0.2  # bit-exact float
+    assert back.failures[1].chips == (0, 1, 63)
+    assert isinstance(back.failures[0].chips, tuple)
 
 
 def test_fig2a_trace_shapes():
