@@ -1,0 +1,188 @@
+"""Planner latency and simulator throughput at pod scale.
+
+Two measurements above the semantic benchmarks (which pin *what* the
+planner decides, not how fast):
+
+  * **planner latency** — schedules priced per second across widths
+    p ∈ {64 … 2048} on a multi-rack pod, for churn-like layout streams
+    (the same slice shape re-placed on isomorphic chip sets, exactly
+    what departures/re-arrivals produce).  Each width is priced twice:
+    the **fast path** (lazy shape-only IR, canonical-layout cache,
+    bound-and-prune candidate search — the simulator's configuration)
+    and the **eager baseline** with every fast path toggled off
+    (literal-chip keys, no pruning, Transfer tables materialized per
+    build — the pre-optimization pricing path).  Both must agree on
+    every price; the speedup is the claim.
+  * **simulator throughput** — events per second replaying a pod churn
+    trace (4×128 chips, failures, morphing) through ``RackSimulator``,
+    plus the run's pricing counters.
+
+Claims (PASS/FAIL rows, gated in the slow CI job):
+
+  * ``claim_planner_speedup``   — fast path ≥ 5× the eager baseline at
+    the gate width (p = 1024; the quick config gates its largest width).
+  * ``claim_lazy_pricing``      — neither the planner sweep nor the
+    simulator run materialized a single Transfer table: pricing reads
+    only schedule shapes.
+  * ``claim_pricing_identical`` — fast-path prices equal the eager
+    baseline's bit-for-bit on every layout compared.
+  * ``claim_sim_events_floor``  — simulator throughput stays above a
+    conservative floor (10× below observed dev-box rates, so only a
+    real regression trips it).
+
+Set ``BENCH_SIM_SCALE_QUICK=1`` for the small configuration the fast CI
+job runs (widths ≤ 256, short trace); results land in
+``BENCH_sim_scale.json`` either way so the perf trajectory accumulates.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import cost_model as cm
+from repro.core.pricing import SchedulePricer
+from repro.core.rack import Pod
+from repro.core.scheduler import (candidate_algos, order_for_locality,
+                                  transfer_tables_built)
+from repro.sim import RackSimulator
+from repro.sim.workload import pod_churn_trace
+
+ALGOS = ("ring", "lumorph2", "lumorph4")
+TILES = 8
+CPR = 128  # chips per rack (half-paper racks, the pod building block)
+FIBERS = 32
+
+#: (widths, gate width, layouts per width, eager layouts per width)
+FULL_WIDTHS = (64, 256, 1024, 2048)
+QUICK_WIDTHS = (64, 256)
+LAYOUTS = 16
+EAGER_LAYOUTS = 3  # the baseline is slow by design; its rate extrapolates
+
+SPEEDUP_GATE = 5.0
+#: events/s floors ~10× under dev-box rates (≈1200 full, ≈2000 quick)
+SIM_FLOOR_FULL = 100.0
+SIM_FLOOR_QUICK = 100.0
+
+SIM_CHIPS, SIM_RACKS, SIM_JOBS, SIM_EVENTS = 512, 4, 2000, 10_000
+QUICK_SIM_CHIPS, QUICK_SIM_RACKS, QUICK_SIM_JOBS, QUICK_SIM_EVENTS = \
+    128, 2, 300, 2000
+
+
+def _quick() -> bool:
+    return os.environ.get("BENCH_SIM_SCALE_QUICK", "") not in ("", "0")
+
+
+def _churn_layouts(p: int, n_racks: int, n: int) -> list[tuple[int, ...]]:
+    """``n`` isomorphic placements of a ``p``-chip equal-share slice:
+    the same shape shifted server-by-server inside each rack — the
+    layout stream tenant churn produces (locality-ordered, like the
+    engine feeds the pricer)."""
+    share = p // n_racks
+    outs = []
+    for k in range(n):
+        off = (k * TILES) % CPR  # whole-server shifts, wrapping in-rack
+        chips = tuple(r * CPR + (off + i) % CPR for r in range(n_racks)
+                      for i in range(share))
+        outs.append(tuple(order_for_locality(chips, TILES,
+                                             chips_per_rack=CPR)))
+    return outs
+
+
+def _rate(pricer: SchedulePricer, layouts, cands, n_bytes) -> tuple[float, list[float]]:
+    """Price every candidate on every layout; return (schedules/s, mins)."""
+    t0 = time.perf_counter()
+    mins = [pricer.cheapest(cands, chips, n_bytes) for chips in layouts]
+    dt = time.perf_counter() - t0
+    n_priced = len(layouts) * len(cands)
+    return n_priced / dt if dt > 0 else float("inf"), mins
+
+
+def run(seed: int = 0) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    quick = _quick()
+    widths = QUICK_WIDTHS if quick else FULL_WIDTHS
+    gate_p = max(widths) if quick else 1024
+    n_bytes = float(4 << 20)
+    link = cm.LUMORPH_LINK
+
+    speedup_at_gate = 0.0
+    prices_identical = True
+    mat0 = transfer_tables_built()
+    fast_materialized = 0
+
+    for p in widths:
+        cm.clear_pricing_caches()  # each width measures from a cold start
+        n_racks = max(1, p // CPR)
+        pod = Pod(n_racks=max(n_racks, 2), chips_per_rack=CPR,
+                  fibers_per_server_pair=FIBERS)
+        layouts = _churn_layouts(p, n_racks, LAYOUTS)
+        cands = candidate_algos(ALGOS, layouts[0],
+                                chips_per_rack=CPR)
+        fast = SchedulePricer(link, rack=pod, tiles_per_server=TILES,
+                              chips_per_rack=CPR)
+        before = transfer_tables_built()
+        fast_rate, fast_mins = _rate(fast, layouts, cands, n_bytes)
+        fast_materialized += transfer_tables_built() - before
+
+        eager = SchedulePricer(link, rack=pod, tiles_per_server=TILES,
+                               chips_per_rack=CPR, canonical=False,
+                               prune=False, eager=True)
+        eager_rate, eager_mins = _rate(eager, layouts[:EAGER_LAYOUTS],
+                                       cands, n_bytes)
+        prices_identical &= fast_mins[:EAGER_LAYOUTS] == eager_mins
+        speedup = fast_rate / eager_rate if eager_rate else float("inf")
+        if p == gate_p:
+            speedup_at_gate = speedup
+        tag = f"sim_scale/planner/p{p}"
+        lines.append(f"{tag}/fast_schedules_per_s,,{fast_rate:.1f}")
+        lines.append(f"{tag}/fast_us_per_schedule,"
+                     f"{1e6 / fast_rate:.3f},")
+        lines.append(f"{tag}/eager_schedules_per_s,,{eager_rate:.1f}")
+        lines.append(f"{tag}/speedup,,{speedup:.2f}")
+        lines.append(f"{tag}/cache_hit_rate,,{fast.stats.hit_rate:.4f}")
+        lines.append(f"{tag}/schedules_built,,{fast.stats.built}")
+        lines.append(f"{tag}/candidates_pruned,,{fast.stats.pruned}")
+
+    lines.append(f"sim_scale/claim_planner_speedup,,"
+                 f"{'PASS' if speedup_at_gate >= SPEEDUP_GATE else 'FAIL'}")
+    lines.append(f"sim_scale/claim_pricing_identical,,"
+                 f"{'PASS' if prices_identical else 'FAIL'}")
+
+    # ---- end-to-end simulator throughput -----------------------------------
+    cm.clear_pricing_caches()
+    chips = QUICK_SIM_CHIPS if quick else SIM_CHIPS
+    racks = QUICK_SIM_RACKS if quick else SIM_RACKS
+    jobs = QUICK_SIM_JOBS if quick else SIM_JOBS
+    max_events = QUICK_SIM_EVENTS if quick else SIM_EVENTS
+    floor = SIM_FLOOR_QUICK if quick else SIM_FLOOR_FULL
+    trace = pod_churn_trace(jobs, n_chips=chips, chips_per_rack=chips // racks,
+                            failure_rate=0.02, seed=seed)
+    sim = RackSimulator("lumorph", trace, n_chips=chips, n_racks=racks,
+                        morph=True)
+    t0 = time.perf_counter()
+    m = sim.run(max_events=max_events)
+    dt = time.perf_counter() - t0
+    events_per_s = m.events / dt if dt > 0 else float("inf")
+    lines.append(f"sim_scale/sim/events,,{m.events}")
+    lines.append(f"sim_scale/sim/events_per_s,,{events_per_s:.1f}")
+    lines.append(f"sim_scale/sim/horizon_s,,{m.horizon:.3f}")
+    for k, v in m.pricing_summary().items():
+        lines.append(f"sim_scale/sim/{k},,{v}")
+    lines.append(f"sim_scale/claim_sim_events_floor,,"
+                 f"{'PASS' if events_per_s >= floor else 'FAIL'}")
+
+    # pricing (planner sweep *and* the whole simulated churn) must not
+    # have materialized a single Transfer table
+    lazy_ok = (fast_materialized == 0 and m.transfers_materialized == 0)
+    lines.append(f"sim_scale/planner/transfer_tables_materialized,,"
+                 f"{fast_materialized}")
+    lines.append(f"sim_scale/claim_lazy_pricing,,"
+                 f"{'PASS' if lazy_ok else 'FAIL'}")
+    assert transfer_tables_built() - mat0 >= 0
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

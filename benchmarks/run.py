@@ -9,6 +9,8 @@ CSV rows for:
   * sim_morph              — online slice morphing vs the static baseline
   * sim_pod                — pod-scale fabric: hierarchical collectives +
                              rack-spanning allocation vs flat/confined
+  * bench_sim_scale        — planner latency (schedules priced/s, fast vs
+                             eager) + simulator events/s at pod scale
   * bench_kernels          — Pallas kernels vs oracles
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
 
@@ -18,7 +20,9 @@ results machine-readably (one record per CSV row, grouped by benchmark) so
 the perf trajectory can be tracked across PRs (``BENCH_*.json``).
 ``--seed N`` re-seeds the trace generators of benchmarks that take one
 (currently the simulator-driven ones), for reproducible what-if sweeps —
-claims are only pinned for the default seed.
+claims are only pinned for the default seed.  ``--profile PATH`` wraps the
+selected benchmarks in cProfile and dumps sorted-cumtime stats to PATH, so
+perf regressions are diagnosable without editing any benchmark.
 """
 
 import argparse
@@ -29,10 +33,11 @@ import sys
 
 def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
-                            fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_morph, sim_pod, sim_rack)
+                            bench_sim_scale, fig2a_fragmentation,
+                            fig4a_training, fig4b_collectives, sim_morph,
+                            sim_pod, sim_rack)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, sim_morph, sim_pod, bench_kernels,
+            sim_rack, sim_morph, sim_pod, bench_sim_scale, bench_kernels,
             bench_collective_exec]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
@@ -61,6 +66,9 @@ def main(argv=None) -> None:
                         help="also write machine-readable results to PATH")
     parser.add_argument("--seed", type=int, default=None,
                         help="re-seed benchmarks whose run() accepts a seed")
+    parser.add_argument("--profile", metavar="PATH", default=None,
+                        help="wrap the selected benchmarks in cProfile and "
+                             "dump sorted-cumtime stats to PATH")
     args = parser.parse_args(argv)
 
     modules = _modules()
@@ -71,6 +79,11 @@ def main(argv=None) -> None:
         raise SystemExit(2)
     selected = args.benchmarks or list(modules)
 
+    profiler = None
+    if args.profile:
+        import cProfile
+        profiler = cProfile.Profile()
+
     results: dict[str, list[dict]] = {}
     header_printed = False
     for name, m in modules.items():
@@ -80,12 +93,22 @@ def main(argv=None) -> None:
         if (args.seed is not None
                 and "seed" in inspect.signature(m.run).parameters):
             kwargs["seed"] = args.seed
-        lines = m.run(**kwargs)
+        if profiler is not None:
+            lines = profiler.runcall(m.run, **kwargs)
+        else:
+            lines = m.run(**kwargs)
         start = 0 if not header_printed else 1  # one CSV header total
         for line in lines[start:]:
             print(line, flush=True)
         results[name] = [_parse_row(line) for line in lines[1:]]
         header_printed = True
+
+    if profiler is not None:
+        import pstats
+        with open(args.profile, "w") as f:
+            pstats.Stats(profiler, stream=f).sort_stats("cumulative") \
+                .print_stats(80)
+        print(f"wrote profile to {args.profile}", file=sys.stderr)
 
     if args.json:
         payload = {

@@ -12,14 +12,18 @@
                         rails (per-rack-pair budgets, rack-tier OCS windows)
   * ``allocator``    -- fragmentation-free multi-tenant allocation + baselines
                         incl. rack-first pod placement
+  * ``pricing``      -- the planner's fast path: canonical-layout cached,
+                        bound-and-prune ``SchedulePricer`` (lazy shape-only
+                        IR; see docs/performance.md)
   * ``sipac``        -- SiPAC(r, l) emulation (paper Fig 3)
   * ``collectives``  -- ``compile_schedule``: Schedule -> shard_map/ppermute
                         ALLREDUCE (ring / LUMORPH-2 / -4 / tree), optional
                         per-hop payload transforms (int8 compression)
 """
 
-from repro.core import (allocator, collectives, cost_model, fabric, rack,  # noqa: F401
-                        scheduler, sipac)
+from repro.core import (allocator, collectives, cost_model, fabric, pricing,  # noqa: F401
+                        rack, scheduler, sipac)
+from repro.core.pricing import SchedulePricer, canonical_layout  # noqa: F401
 from repro.core.collectives import all_reduce, make_all_reduce  # noqa: F401
 from repro.core.cost_model import (  # noqa: F401
     IDEAL_SWITCH,

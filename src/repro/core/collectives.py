@@ -78,6 +78,9 @@ def compile_schedule(schedule: Schedule, axis_name: str,
     (quantization, dtype casts, …); ``decode`` receives the original piece
     as its shape/dtype witness.
     """
+    # execution is the one consumer that needs the per-rank chunk tables:
+    # build them now (pricing/simulation read only the schedule's shape)
+    schedule.materialize()
     p = len(schedule.participants)
     rounds = schedule.rounds
     n_chunks = schedule.n_chunks

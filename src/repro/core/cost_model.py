@@ -243,11 +243,35 @@ ALGORITHMS: dict[str, Callable[[float, int, LinkModel], float]] = {
 IR_PRICED = ("ring", "tree", "lumorph2", "lumorph4")
 
 
-@functools.lru_cache(maxsize=65536)
+#: Explicit bound on the module-level pricing caches (``algorithm_cost``'s
+#: IR delegate here, ``schedule_for_execution`` in ``core.collectives``):
+#: long-lived processes — CI sweeps, notebooks, the scale benchmark —
+#: must not grow them without bound.  See :func:`clear_pricing_caches`.
+IR_COST_CACHE_SIZE = 65536
+
+
+@functools.lru_cache(maxsize=IR_COST_CACHE_SIZE)
 def _ir_cost(algo: str, n_bytes: float, p: int, link: LinkModel) -> float:
     # deferred import: scheduler builds on this module's LinkModel
     from repro.core.scheduler import build_schedule
     return build_schedule(algo, tuple(range(p)), n_bytes).cost(link)
+
+
+def clear_pricing_caches() -> None:
+    """Drop every module-level pricing cache: the ``algorithm_cost`` /
+    ``Schedule.cost`` LRU here and the compiled-schedule cache in
+    ``repro.core.collectives`` (when that module was imported — it pulls
+    in jax, which this module never does).  Per-simulator caches
+    (``repro.core.pricing.SchedulePricer``) die with their owner; this
+    helper is for long-lived processes — CI sweeps, notebooks — and is
+    called between benchmark configurations so measurements don't leak
+    cache state into each other."""
+    import sys
+
+    _ir_cost.cache_clear()
+    collectives = sys.modules.get("repro.core.collectives")
+    if collectives is not None:
+        collectives.schedule_for_execution.cache_clear()
 
 
 def algorithm_cost(algo: str, n_bytes: float, p: int, link: LinkModel) -> float:

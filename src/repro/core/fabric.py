@@ -26,6 +26,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Optional
 
+import numpy as np
+
 from repro.core.cost_model import MZI_RECONFIG_DELAY
 
 #: Paper §2 hardware limits.
@@ -138,6 +140,33 @@ def validate_shared_budget(per_pair: dict[tuple[int, int], int], budget: int,
             raise CircuitError(f"{noun} {key} need {n} {medium} > {budget}")
 
 
+def round_pairs_array(pairs) -> np.ndarray:
+    """Normalize one round's circuit list to an ``(n, 2)`` int array —
+    the dry checks accept the Schedule IR's array-backed rounds and plain
+    ``[(src, dst), ...]`` lists interchangeably."""
+    if isinstance(pairs, np.ndarray):
+        return pairs.reshape(-1, 2)
+    return np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+
+
+def peak_multiplicity(ids: np.ndarray) -> int:
+    """Peak multiplicity of any value in ``ids`` (0 when empty)."""
+    if ids.size == 0:
+        return 0
+    return int(np.bincount(np.unique(ids, return_inverse=True)[1]).max())
+
+
+def peak_pair_multiplicity(a: np.ndarray, b: np.ndarray) -> int:
+    """Peak multiplicity of any unordered ``(a, b)`` pair — the one
+    demand-counting primitive shared by the rack/pod dry checks and the
+    scheduler's fiber/rail pricing, so the two can never disagree on a
+    round's shared-medium demand."""
+    if a.size == 0:
+        return 0
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    return peak_multiplicity(lo * (int(hi.max()) + 1) + hi)
+
+
 class LumorphRack:
     """LUMORPH: ``n_servers`` LIGHTPATH servers cascaded with direct fibers.
 
@@ -233,28 +262,45 @@ class LumorphRack:
     def live_circuits(self) -> list[Circuit]:
         return list(self._circuits.values())
 
-    def validate_round(self, pairs: list[tuple[int, int]],
+    def validate_round(self, pairs,
                        check_fibers: bool = True) -> None:
         """Check a round of simultaneous transfers is realizable (dry check).
 
         Degree limits: per-chip TX/RX count ≤ TRX banks; wavelength budget;
         fiber budget per server pair.  Raises CircuitError with a diagnosis.
+        ``pairs`` is an ``(n, 2)`` array or a ``[(src, dst), ...]`` list.
         ``check_fibers=False`` skips the fiber budget, for callers that
         model fiber shortage as time-sharing (serialized sub-rounds priced
         by ``Schedule.cost(link, rack=...)``) rather than infeasibility.
+
+        The healthy path is fully vectorized; only a detected violation
+        falls back to per-pair accounting to produce the exact diagnosis.
         """
-        tx = {}
-        rx = {}
+        arr = round_pairs_array(pairs)
+        banks = self.servers[0].trx_banks_per_tile
+        wavelengths = self.servers[0].wavelengths_per_tile
+        ok = (peak_multiplicity(arr[:, 0]) <= min(banks, wavelengths)
+              and peak_multiplicity(arr[:, 1]) <= banks)
+        srv = arr // self.tiles_per_server
+        inter = srv[srv[:, 0] != srv[:, 1]]
+        if ok and check_fibers:
+            ok = (peak_pair_multiplicity(inter[:, 0], inter[:, 1])
+                  <= self.fibers_per_server_pair)
+        if ok:
+            return
+        # violation: rebuild the per-chip/per-pair tallies in pair order so
+        # the diagnosis names the same offender the scalar path always did
+        tx: dict[int, int] = {}
+        rx: dict[int, int] = {}
         fibers: dict[tuple[int, int], int] = {}
-        for s, d in pairs:
+        for s, d in arr.tolist():
             tx[s] = tx.get(s, 0) + 1
             rx[d] = rx.get(d, 0) + 1
             s_srv, d_srv = self.server_of(s), self.server_of(d)
             if s_srv != d_srv:
                 key = (min(s_srv, d_srv), max(s_srv, d_srv))
                 fibers[key] = fibers.get(key, 0) + 1
-        validate_endpoint_limits(tx, rx, self.servers[0].trx_banks_per_tile,
-                                 self.servers[0].wavelengths_per_tile)
+        validate_endpoint_limits(tx, rx, banks, wavelengths)
         if check_fibers:
             validate_shared_budget(fibers, self.fibers_per_server_pair,
                                    "servers", "fibers")

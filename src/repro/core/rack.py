@@ -31,7 +31,8 @@ from typing import Iterable, Optional
 from repro.core.cost_model import (LinkModel, MZI_RECONFIG_DELAY,
                                    POD_RAIL_LINK)
 from repro.core.fabric import (Circuit, CircuitError, LightpathFabric,  # noqa: F401
-                               LumorphRack, validate_endpoint_limits,
+                               LumorphRack, peak_multiplicity, peak_pair_multiplicity,
+                               round_pairs_array, validate_endpoint_limits,
                                validate_shared_budget)
 
 
@@ -193,21 +194,43 @@ class Pod:
         return list(self._circuits.values())
 
     # -- dry checks ----------------------------------------------------------
-    def validate_round(self, pairs: list[tuple[int, int]],
+    def validate_round(self, pairs,
                        check_fibers: bool = True) -> None:
         """Pod-tier dry check of one round of simultaneous transfers.
 
         Per-chip TRX/wavelength limits always hold; with ``check_fibers``
         the shared-medium budgets are enforced too — intra-rack
-        server-pair fibers *and* rack-pair rails.  ``check_fibers=False``
-        skips both, for callers that price shortage as β time-sharing
-        (``Schedule.cost`` with a pod) instead of infeasibility.
+        server-pair fibers *and* rack-pair rails.  ``pairs`` is an
+        ``(n, 2)`` array or a ``[(src, dst), ...]`` list.
+        ``check_fibers=False`` skips both budgets, for callers that price
+        shortage as β time-sharing (``Schedule.cost`` with a pod) instead
+        of infeasibility.  Like the rack's check, the healthy path is
+        vectorized; violations fall back to per-pair accounting for the
+        exact diagnosis.
         """
+        arr = round_pairs_array(pairs)
+        fab = self.racks[0].servers[0]
+        banks = fab.trx_banks_per_tile
+        wavelengths = fab.wavelengths_per_tile
+        ok = (peak_multiplicity(arr[:, 0]) <= min(banks, wavelengths)
+              and peak_multiplicity(arr[:, 1]) <= banks)
+        if ok and check_fibers:
+            rk = arr // self.chips_per_rack
+            crossing = rk[:, 0] != rk[:, 1]
+            rails_arr = rk[crossing]
+            srv = arr[~crossing] // self.tiles_per_server
+            srv = srv[srv[:, 0] != srv[:, 1]]
+            ok = (peak_pair_multiplicity(srv[:, 0], srv[:, 1])
+                  <= self.fibers_per_server_pair
+                  and peak_pair_multiplicity(rails_arr[:, 0], rails_arr[:, 1])
+                  <= self.rails_per_rack_pair)
+        if ok:
+            return
         tx: dict[int, int] = {}
         rx: dict[int, int] = {}
         fibers: dict[tuple[int, int], int] = {}
         rails: dict[tuple[int, int], int] = {}
-        for s, d in pairs:
+        for s, d in arr.tolist():
             tx[s] = tx.get(s, 0) + 1
             rx[d] = rx.get(d, 0) + 1
             s_rack, d_rack = self.rack_of(s), self.rack_of(d)
@@ -219,16 +242,14 @@ class Pod:
                 if s_srv != d_srv:
                     skey = (min(s_srv, d_srv), max(s_srv, d_srv))
                     fibers[skey] = fibers.get(skey, 0) + 1
-        fab = self.racks[0].servers[0]
-        validate_endpoint_limits(tx, rx, fab.trx_banks_per_tile,
-                                 fab.wavelengths_per_tile)
+        validate_endpoint_limits(tx, rx, banks, wavelengths)
         if check_fibers:
             validate_shared_budget(fibers, self.fibers_per_server_pair,
                                    "servers", "fibers")
             validate_shared_budget(rails, self.rails_per_rack_pair,
                                    "racks", "rails")
 
-    def feasible_round(self, pairs: list[tuple[int, int]],
+    def feasible_round(self, pairs,
                        check_fibers: bool = True) -> bool:
         try:
             self.validate_round(pairs, check_fibers=check_fibers)

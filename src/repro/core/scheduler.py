@@ -17,19 +17,41 @@ arithmetic each round needs, and the three consumers all derive from it:
 
 Adding an algorithm therefore costs one builder, not three parallel
 implementations.
+
+**Shape vs. Transfer tables.**  The three consumers need very different
+amounts of the IR.  Pricing and validation only read each round's
+*shape* — the circuit-pair array, payload bytes, egress fanout, tier and
+phase tag — while only execution needs the per-rank :class:`Transfer`
+chunk tables.  Builders therefore construct the shape eagerly (as numpy
+``(n, 2)`` chip-pair arrays, vectorized) and defer the Transfer tables
+behind :meth:`Schedule.materialize`: pricing a candidate schedule
+allocates **no per-rank chunk-id lists**, which is what makes pod-scale
+planner sweeps cheap (see ``docs/performance.md``).  The module-level
+:func:`transfer_tables_built` counter lets the simulator assert that a
+churn trace's pricing steady state materialized nothing.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cost_model import LinkModel, mixed_radix_factorization
-from repro.core.fabric import LumorphRack
+from repro.core.fabric import LumorphRack, peak_pair_multiplicity
 from repro.core.rack import Pod, group_by_rack
+
+#: Transfer tables built so far (one count per schedule whose lazy fill
+#: actually ran).  ``repro.sim`` snapshots this around a run to report —
+#: and test — that pricing materializes nothing.
+_TRANSFER_TABLES_BUILT = 0
+
+
+def transfer_tables_built() -> int:
+    """Process-wide count of schedules whose Transfer tables were built."""
+    return _TRANSFER_TABLES_BUILT
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -50,27 +72,75 @@ class Transfer:
     reduce: bool = True  # True → add incoming, False → overwrite
 
 
-@dataclasses.dataclass(frozen=True, eq=False)
 class Round:
     """One communication round: simultaneous directed transfers.
 
-    ``pairs`` (in *chip-id* space) is what the fabric sees — the circuit
-    set to program, validate, and price.  ``transfers`` (in *rank* space)
-    is what the executable compiler consumes; their union maps 1:1 onto
-    ``pairs`` through the schedule's participant list.
+    The round's *shape* — ``pairs_arr`` (an ``(n, 2)`` int array of
+    ``(src_chip, dst_chip)`` circuits), payload bytes, egress fanout,
+    planned ``tier`` and ``reduce`` phase tag — is what the fabric sees:
+    the circuit set to program, validate, and price.  The ``transfers``
+    (rank space) are what the executable compiler consumes; they exist
+    only after :meth:`Schedule.materialize` ran, and their union maps 1:1
+    onto the pairs through the schedule's participant list.
     """
 
-    pairs: tuple[tuple[int, int], ...]  # (src_chip, dst_chip)
-    bytes_per_circuit: float  # payload each circuit carries this round
-    #: circuits sharing one chip's egress this round (bandwidth divisor)
-    egress_fanout: int = 1
-    #: execution lowering: one ppermute per entry (rank space)
-    transfers: tuple[Transfer, ...] = ()
-    #: fabric tier the round was *planned* for: 0 = intra-rack, 1 = the
-    #: inter-rack rail stage of a hierarchical composition.  Pricing does
-    #: not trust the tag — it re-derives the tier from the pod geometry —
-    #: but the tag lets consumers decompose hierarchical programs.
-    tier: int = 0
+    __slots__ = ("pairs_arr", "bytes_per_circuit", "egress_fanout", "tier",
+                 "reduce", "_transfers", "_pairs", "_sig")
+
+    def __init__(self, pairs, bytes_per_circuit: float,
+                 egress_fanout: int = 1, tier: int = 0,
+                 reduce: Optional[bool] = None,
+                 transfers: Optional[tuple[Transfer, ...]] = None):
+        if isinstance(pairs, np.ndarray):
+            arr = pairs
+        else:
+            arr = np.asarray(list(pairs), dtype=np.int64).reshape(-1, 2)
+        #: (n, 2) int array of directed circuits — the canonical storage
+        self.pairs_arr = arr
+        #: payload each circuit carries this round
+        self.bytes_per_circuit = bytes_per_circuit
+        #: circuits sharing one chip's egress this round (bandwidth divisor)
+        self.egress_fanout = egress_fanout
+        #: fabric tier the round was *planned* for: 0 = intra-rack, 1 = the
+        #: inter-rack rail stage of a hierarchical composition.  Pricing
+        #: does not trust the tag — it re-derives the tier from the pod
+        #: geometry — but the tag lets consumers decompose hier programs.
+        self.tier = tier
+        #: shape-level phase tag: True = reduce-scatter (accumulate),
+        #: False = all-gather/broadcast (overwrite), None = untagged.
+        #: Mirrors the transfers' ``reduce`` flags without materializing
+        #: them — hierarchical composition splits phases on this.
+        self.reduce = reduce
+        self._transfers = transfers
+        self._pairs = None
+        self._sig = None
+
+    @property
+    def pairs(self) -> tuple[tuple[int, int], ...]:
+        """The circuits as a tuple of ``(src_chip, dst_chip)`` pairs
+        (compat/introspection view of :attr:`pairs_arr`)."""
+        if self._pairs is None:
+            self._pairs = tuple(map(tuple, self.pairs_arr.tolist()))
+        return self._pairs
+
+    @property
+    def transfers(self) -> tuple[Transfer, ...]:
+        """Execution lowering: one ppermute per entry (rank space).
+        Only available on a materialized schedule."""
+        t = self._transfers
+        if t is None:
+            raise RuntimeError(
+                "Transfer tables are lazy: call Schedule.materialize() "
+                "before reading Round.transfers (pricing never needs them)")
+        return t
+
+    @property
+    def circuit_signature(self) -> bytes:
+        """Canonical identity of the round's circuit *set* (sorted unique
+        pairs) — two rounds reprogram no MZIs iff signatures match."""
+        if self._sig is None:
+            self._sig = np.unique(self.pairs_arr, axis=0).tobytes()
+        return self._sig
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -82,17 +152,59 @@ class Schedule:
     #: chunk granularity of the executable lowering (buffer padded to a
     #: multiple of this; 1 for whole-buffer algorithms like tree)
     n_chunks: int = 1
+    #: lazy Transfer-table builder: returns one tuple of transfers per
+    #: round.  ``materialize`` invokes it at most once.
+    _fill: Optional[Callable[[], tuple[tuple[Transfer, ...], ...]]] = \
+        dataclasses.field(default=None, repr=False)
+
+    # -- lazy transfer tables ------------------------------------------------
+    @property
+    def materialized(self) -> bool:
+        return all(r._transfers is not None for r in self.rounds)
+
+    def materialize(self) -> "Schedule":
+        """Build the per-round :class:`Transfer` tables (idempotent).
+
+        Execution (``compile_schedule``) calls this; pricing never does —
+        the benchmark and the simulator assert as much through
+        :func:`transfer_tables_built`.  Returns ``self`` for chaining.
+        """
+        global _TRANSFER_TABLES_BUILT
+        if self._fill is not None and not self.materialized:
+            tables = self._fill()
+            if len(tables) != len(self.rounds):
+                raise RuntimeError(
+                    f"{self.algo}: transfer fill produced {len(tables)} "
+                    f"tables for {len(self.rounds)} rounds")
+            for rnd, ts in zip(self.rounds, tables):
+                rnd._transfers = tuple(ts)
+            _TRANSFER_TABLES_BUILT += 1
+        else:
+            for rnd in self.rounds:
+                if rnd._transfers is None:
+                    raise RuntimeError(
+                        f"{self.algo}: round has no transfer lowering and "
+                        "no fill function")
+        return self
+
+    # -- pricing -------------------------------------------------------------
+    def _changed_flags(self):
+        """Yield ``(round, changed)`` where ``changed`` means the round's
+        circuit set differs from the previous round's (an MZI window)."""
+        prev_arr: Optional[np.ndarray] = None
+        prev_sig: bytes = b""
+        for r in self.rounds:
+            arr = r.pairs_arr
+            if prev_arr is not None and arr is prev_arr:
+                yield r, False  # same array object → identical circuits
+                continue
+            sig = r.circuit_signature
+            yield r, sig != prev_sig
+            prev_arr, prev_sig = arr, sig
 
     def reconfigurations(self) -> int:
         """Rounds whose circuit set differs from the previous round's."""
-        count = 0
-        prev: frozenset = frozenset()
-        for r in self.rounds:
-            cur = frozenset(r.pairs)
-            if cur != prev:
-                count += 1
-            prev = cur
-        return count
+        return sum(1 for _, changed in self._changed_flags() if changed)
 
     def _priced_rounds(self, link: LinkModel,
                        rack: "Optional[LumorphRack | Pod]" = None):
@@ -107,32 +219,43 @@ class Schedule:
         is the *bottleneck* of the intra path and the rail path (rail
         demand time-shares ``rails_per_rack_pair`` the same way fibers
         do).  The tier yielded is derived from the geometry (1 = crosses
-        racks), not from the round's tag.
+        racks), not from the round's tag.  Geometry-derived terms
+        (crossing, fiber/rail stretch) are reused across consecutive
+        rounds with an unchanged circuit set — e.g. ring's 2(p−1)
+        identical rounds are analyzed once.
         """
         pod = rack if isinstance(rack, Pod) else None
         cpr = pod.chips_per_rack if pod is not None else None
-        prev: frozenset = frozenset()
-        for r in self.rounds:
-            cur = frozenset(r.pairs)
-            changed = cur != prev
-            prev = cur
-            crossing = pod is not None and any(
-                s // cpr != d // cpr for s, d in r.pairs)
+        geom_arr: Optional[np.ndarray] = None
+        crossing = False
+        stretch = 1
+        rail_stretch = 1
+        for r, changed in self._changed_flags():
+            arr = r.pairs_arr
+            # `changed` (the MZI-window flag) compares circuit *sets*, but
+            # demand counts multiplicities — reuse the geometry terms only
+            # when the pairs match element-for-element
+            if geom_arr is None or not (arr is geom_arr
+                                        or np.array_equal(arr, geom_arr)):
+                geom_arr = arr
+                crossing = pod is not None and bool(
+                    (arr[:, 0] // cpr != arr[:, 1] // cpr).any())
+                stretch = 1
+                if rack is not None:
+                    demand = _round_fiber_demand(arr, rack.tiles_per_server,
+                                                 chips_per_rack=cpr)
+                    if demand > rack.fibers_per_server_pair:
+                        stretch = -(-demand // rack.fibers_per_server_pair)
+                rail_stretch = 1
+                if crossing:
+                    demand = _round_rail_demand(arr, cpr)
+                    if demand > pod.rails_per_rack_pair:
+                        rail_stretch = -(-demand // pod.rails_per_rack_pair)
             rail = pod.rail_link if crossing else None
             governing = rail if crossing else link
             seconds = governing.round_alpha(changed)
-            stretch = 1
-            if rack is not None:
-                demand = _round_fiber_demand(r.pairs, rack.tiles_per_server,
-                                             chips_per_rack=cpr)
-                if demand > rack.fibers_per_server_pair:
-                    stretch = -(-demand // rack.fibers_per_server_pair)
             beta_s = r.bytes_per_circuit * r.egress_fanout * link.beta * stretch
             if crossing:
-                rail_stretch = 1
-                demand = _round_rail_demand(r.pairs, cpr)
-                if demand > pod.rails_per_rack_pair:
-                    rail_stretch = -(-demand // pod.rails_per_rack_pair)
                 beta_s = max(beta_s, r.bytes_per_circuit * r.egress_fanout
                              * rail.beta * rail_stretch)
             yield (1 if crossing else 0), seconds + beta_s
@@ -146,7 +269,8 @@ class Schedule:
         shortages are charged as β time-sharing, and any round that
         crosses racks runs at the rail tier's slower link parameters.
         MZIs for all sub-batches are programmed in one window, so α is
-        never stretched.
+        never stretched.  Pricing reads only the schedule's shape — no
+        Transfer tables are materialized.
         """
         return sum(s for _, s in self._priced_rounds(link, rack))
 
@@ -174,13 +298,12 @@ class Schedule:
         """
         for i, r in enumerate(self.rounds):
             try:
-                rack.validate_round(list(r.pairs), check_fibers=check_fibers)
+                rack.validate_round(r.pairs_arr, check_fibers=check_fibers)
             except Exception as e:  # re-raise with round context
                 raise type(e)(f"round {i}: {e}") from e
 
 
-def _round_fiber_demand(pairs: Sequence[tuple[int, int]],
-                        tiles_per_server: int,
+def _round_fiber_demand(pairs, tiles_per_server: int,
                         chips_per_rack: Optional[int] = None) -> int:
     """Peak circuits any one server pair must carry for this round.
 
@@ -188,27 +311,20 @@ def _round_fiber_demand(pairs: Sequence[tuple[int, int]],
     they ride the pod's rails (see :func:`_round_rail_demand`), not the
     intra-rack server-pair fibers.
     """
-    per_pair: dict[tuple[int, int], int] = {}
-    for s, d in pairs:
-        if chips_per_rack is not None and s // chips_per_rack != d // chips_per_rack:
-            continue
-        ss, ds = s // tiles_per_server, d // tiles_per_server
-        if ss != ds:
-            key = (min(ss, ds), max(ss, ds))
-            per_pair[key] = per_pair.get(key, 0) + 1
-    return max(per_pair.values()) if per_pair else 0
+    arr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    if chips_per_rack is not None:
+        arr = arr[arr[:, 0] // chips_per_rack == arr[:, 1] // chips_per_rack]
+    srv = arr // tiles_per_server
+    srv = srv[srv[:, 0] != srv[:, 1]]
+    return peak_pair_multiplicity(srv[:, 0], srv[:, 1])
 
 
-def _round_rail_demand(pairs: Sequence[tuple[int, int]],
-                       chips_per_rack: int) -> int:
+def _round_rail_demand(pairs, chips_per_rack: int) -> int:
     """Peak circuits any one *rack* pair must carry for this round."""
-    per_pair: dict[tuple[int, int], int] = {}
-    for s, d in pairs:
-        sr, dr = s // chips_per_rack, d // chips_per_rack
-        if sr != dr:
-            key = (min(sr, dr), max(sr, dr))
-            per_pair[key] = per_pair.get(key, 0) + 1
-    return max(per_pair.values()) if per_pair else 0
+    arr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    rk = arr // chips_per_rack
+    rk = rk[rk[:, 0] != rk[:, 1]]
+    return peak_pair_multiplicity(rk[:, 0], rk[:, 1])
 
 
 # ---------------------------------------------------------------------------
@@ -220,31 +336,40 @@ def ring_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
 
     Chunk map (n_chunks = p): reduce-scatter round ``t`` sends chunk
     ``(i−t) mod p`` and accumulates into ``(i−t−1) mod p``; the all-gather
-    mirrors with overwrites.  The ring circuit set never changes.
+    mirrors with overwrites.  The ring circuit set never changes (all
+    rounds share one pairs array).
     """
+    chips = tuple(chips)
     p = len(chips)
-    rounds = []
+    rounds: list[Round] = []
+    fill = None
     if p > 1:
-        ring_pairs = tuple((chips[i], chips[(i + 1) % p]) for i in range(p))
-        perm = tuple((i, (i + 1) % p) for i in range(p))
+        arr = np.asarray(chips, dtype=np.int64)
+        ring_pairs = np.stack([arr, np.roll(arr, -1)], axis=1)
         chunk = n_bytes / p
-        ranks = np.arange(p, dtype=np.int32)
-        for t in range(p - 1):  # reduce-scatter
-            xfer = Transfer(perm=perm,
-                            send=((ranks - t) % p)[:, None],
-                            recv=((ranks - t - 1) % p)[:, None],
-                            reduce=True)
-            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk,
-                                transfers=(xfer,)))
-        for t in range(p - 1):  # all-gather
-            xfer = Transfer(perm=perm,
-                            send=((ranks + 1 - t) % p)[:, None],
-                            recv=((ranks - t) % p)[:, None],
-                            reduce=False)
-            rounds.append(Round(pairs=ring_pairs, bytes_per_circuit=chunk,
-                                transfers=(xfer,)))
-    return Schedule("ring", tuple(chips), tuple(rounds), n_bytes,
-                    n_chunks=max(p, 1))
+        for _ in range(p - 1):  # reduce-scatter
+            rounds.append(Round(ring_pairs, chunk, reduce=True))
+        for _ in range(p - 1):  # all-gather
+            rounds.append(Round(ring_pairs, chunk, reduce=False))
+
+        def fill():
+            perm = tuple((i, (i + 1) % p) for i in range(p))
+            ranks = np.arange(p, dtype=np.int32)
+            tables = []
+            for t in range(p - 1):  # reduce-scatter
+                tables.append((Transfer(perm=perm,
+                                        send=((ranks - t) % p)[:, None],
+                                        recv=((ranks - t - 1) % p)[:, None],
+                                        reduce=True),))
+            for t in range(p - 1):  # all-gather
+                tables.append((Transfer(perm=perm,
+                                        send=((ranks + 1 - t) % p)[:, None],
+                                        recv=((ranks - t) % p)[:, None],
+                                        reduce=False),))
+            return tuple(tables)
+
+    return Schedule("ring", chips, tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1), _fill=fill)
 
 
 def _chunk_range(start: int, size: int) -> np.ndarray:
@@ -261,53 +386,80 @@ def rhd_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
     the kept half.  Doubling mirrors: ship the own region, adopt the
     sibling's.
     """
+    chips = tuple(chips)
     p = len(chips)
     if p & (p - 1):
         return ring_schedule(chips, n_bytes)  # paper §3 fallback
     rounds: list[Round] = []
     steps = int(math.log2(p)) if p > 1 else 0
-    regions = [(0, p)] * p  # (start chunk, size) per rank
+    arr = np.asarray(chips, dtype=np.int64)
+    idx = np.arange(p)
     chunk = n_bytes / 2
     dist = p // 2
     for _ in range(steps):  # halving
-        pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
-        perm = tuple((i, i ^ dist) for i in range(p))
-        send = np.empty((p, regions[0][1] // 2), dtype=np.int32)
-        recv = np.empty_like(send)
-        for i in range(p):
-            start, size = regions[i]
-            half = size // 2
-            if (i // dist) % 2 == 0:  # keep low half, ship high half
-                keep, ship = (start, half), (start + half, half)
-            else:
-                keep, ship = (start + half, half), (start, half)
-            send[i] = _chunk_range(*ship)
-            recv[i] = _chunk_range(*keep)
-            regions[i] = keep
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk,
-                            transfers=(Transfer(perm, send, recv, reduce=True),)))
+        rounds.append(Round(np.stack([arr, arr[idx ^ dist]], axis=1),
+                            chunk, reduce=True))
         chunk /= 2
         dist //= 2
     chunk = n_bytes / p
     dist = 1
     for _ in range(steps):  # doubling
-        pairs = tuple((chips[i], chips[i ^ dist]) for i in range(p))
-        perm = tuple((i, i ^ dist) for i in range(p))
-        send = np.empty((p, regions[0][1]), dtype=np.int32)
-        recv = np.empty_like(send)
-        for i in range(p):
-            send[i] = _chunk_range(*regions[i])
-            recv[i] = _chunk_range(*regions[i ^ dist])
-        for i in range(p):  # merge sibling regions
-            start, size = regions[i]
-            sib_start, _ = regions[i ^ dist]
-            regions[i] = (min(start, sib_start), size * 2)
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=chunk,
-                            transfers=(Transfer(perm, send, recv, reduce=False),)))
+        rounds.append(Round(np.stack([arr, arr[idx ^ dist]], axis=1),
+                            chunk, reduce=False))
         chunk *= 2
         dist *= 2
-    return Schedule("lumorph2", tuple(chips), tuple(rounds), n_bytes,
-                    n_chunks=max(p, 1))
+
+    def fill():
+        tables = []
+        regions = [(0, p)] * p  # (start chunk, size) per rank
+        d = p // 2
+        for _ in range(steps):  # halving
+            perm = tuple((i, i ^ d) for i in range(p))
+            send = np.empty((p, regions[0][1] // 2), dtype=np.int32)
+            recv = np.empty_like(send)
+            for i in range(p):
+                start, size = regions[i]
+                half = size // 2
+                if (i // d) % 2 == 0:  # keep low half, ship high half
+                    keep, ship = (start, half), (start + half, half)
+                else:
+                    keep, ship = (start + half, half), (start, half)
+                send[i] = _chunk_range(*ship)
+                recv[i] = _chunk_range(*keep)
+                regions[i] = keep
+            tables.append((Transfer(perm, send, recv, reduce=True),))
+            d //= 2
+        d = 1
+        for _ in range(steps):  # doubling
+            perm = tuple((i, i ^ d) for i in range(p))
+            send = np.empty((p, regions[0][1]), dtype=np.int32)
+            recv = np.empty_like(send)
+            for i in range(p):
+                send[i] = _chunk_range(*regions[i])
+                recv[i] = _chunk_range(*regions[i ^ d])
+            for i in range(p):  # merge sibling regions
+                start, size = regions[i]
+                sib_start, _ = regions[i ^ d]
+                regions[i] = (min(start, sib_start), size * 2)
+            tables.append((Transfer(perm, send, recv, reduce=False),))
+            d *= 2
+        return tuple(tables)
+
+    return Schedule("lumorph2", chips, tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1), _fill=fill if steps else None)
+
+
+def _rqq_round_pairs(arr: np.ndarray, idx: np.ndarray, r: int,
+                     stride: int) -> np.ndarray:
+    """Circuit pairs of one radix-``r`` round: per digit offset, every
+    chip pairs with the member of its digit group ``off`` digits away
+    (blocks concatenated in offset order — the builder's round layout)."""
+    digit = (idx // stride) % r
+    blocks = []
+    for off in range(1, r):
+        j = idx + (((digit + off) % r) - digit) * stride
+        blocks.append(np.stack([arr, arr[j]], axis=1))
+    return np.concatenate(blocks, axis=0)
 
 
 def rqq_schedule(chips: Sequence[int], n_bytes: float, radix: int = 4) -> Schedule:
@@ -319,74 +471,78 @@ def rqq_schedule(chips: Sequence[int], n_bytes: float, radix: int = 4) -> Schedu
     in its digit group (egress bandwidth split r−1 ways).  Each round
     lowers to r−1 transfers — one ppermute per digit offset.
     """
+    chips = tuple(chips)
     p = len(chips)
     radices = mixed_radix_factorization(p, radix) if p > 1 else []
+    arr = np.asarray(chips, dtype=np.int64)
+    idx = np.arange(p)
     rounds: list[Round] = []
-    regions = [(0, p)] * p
     group = 1  # how many ways the buffer is already scattered
-    strides: list[tuple[int, int]] = []  # (radix, stride) per phase for mirroring
+    strides: list[tuple[int, int]] = []  # (radix, stride) per phase
     stride = 1
     for r in radices:  # ---- reduce-scatter ----
-        pairs = []
-        xfers = []
-        sub = regions[0][1] // r
-        for off in range(1, r):
-            perm = []
-            send = np.empty((p, sub), dtype=np.int32)
-            recv = np.empty_like(send)
-            for i in range(p):
-                digit = (i // stride) % r
-                j = i + ((digit + off) % r - digit) * stride
-                perm.append((i, j))
-                pairs.append((chips[i], chips[j]))
-                start, _ = regions[i]
-                # ship the partner's digit block, accumulate into own block
-                send[i] = _chunk_range(start + ((digit + off) % r) * sub, sub)
-                recv[i] = _chunk_range(start + digit * sub, sub)
-            xfers.append(Transfer(tuple(perm), send, recv, reduce=True))
-        for i in range(p):
-            start, _ = regions[i]
-            digit = (i // stride) % r
-            regions[i] = (start + digit * sub, sub)
         chunk = n_bytes / group  # bytes currently owned by each chip
-        rounds.append(Round(pairs=tuple(pairs),
-                            bytes_per_circuit=chunk / r,
-                            egress_fanout=r - 1,
-                            transfers=tuple(xfers)))
+        rounds.append(Round(_rqq_round_pairs(arr, idx, r, stride),
+                            chunk / r, egress_fanout=r - 1, reduce=True))
         strides.append((r, stride))
         stride *= r
         group *= r
     for r, st in reversed(strides):  # ---- all-gather (mirror) ----
         group //= r
         chunk = n_bytes / group
-        sub = regions[0][1]
-        pairs = []
-        xfers = []
-        for off in range(1, r):
-            perm = []
-            send = np.empty((p, sub), dtype=np.int32)
-            recv = np.empty_like(send)
+        rounds.append(Round(_rqq_round_pairs(arr, idx, r, st),
+                            chunk / r, egress_fanout=r - 1, reduce=False))
+
+    def fill():
+        tables = []
+        regions = [(0, p)] * p
+        for r, stride in strides:  # reduce-scatter
+            xfers = []
+            sub = regions[0][1] // r
+            for off in range(1, r):
+                perm = []
+                send = np.empty((p, sub), dtype=np.int32)
+                recv = np.empty_like(send)
+                for i in range(p):
+                    digit = (i // stride) % r
+                    j = i + ((digit + off) % r - digit) * stride
+                    perm.append((i, j))
+                    start, _ = regions[i]
+                    # ship the partner's digit block, accumulate into own
+                    send[i] = _chunk_range(start + ((digit + off) % r) * sub, sub)
+                    recv[i] = _chunk_range(start + digit * sub, sub)
+                xfers.append(Transfer(tuple(perm), send, recv, reduce=True))
             for i in range(p):
-                digit = (i // st) % r
-                j = i + ((digit + off) % r - digit) * st
-                perm.append((i, j))
-                pairs.append((chips[i], chips[j]))
                 start, _ = regions[i]
-                parent = start - digit * sub
-                send[i] = _chunk_range(start, sub)
-                # the arriving block was digit (digit−off) of the parent
-                recv[i] = _chunk_range(parent + ((digit - off) % r) * sub, sub)
-            xfers.append(Transfer(tuple(perm), send, recv, reduce=False))
-        for i in range(p):
-            start, _ = regions[i]
-            digit = (i // st) % r
-            regions[i] = (start - digit * sub, sub * r)
-        rounds.append(Round(pairs=tuple(pairs),
-                            bytes_per_circuit=chunk / r,
-                            egress_fanout=r - 1,
-                            transfers=tuple(xfers)))
-    return Schedule(f"lumorph{radix}", tuple(chips), tuple(rounds), n_bytes,
-                    n_chunks=max(p, 1))
+                digit = (i // stride) % r
+                regions[i] = (start + digit * sub, sub)
+            tables.append(tuple(xfers))
+        for r, st in reversed(strides):  # all-gather (mirror)
+            sub = regions[0][1]
+            xfers = []
+            for off in range(1, r):
+                perm = []
+                send = np.empty((p, sub), dtype=np.int32)
+                recv = np.empty_like(send)
+                for i in range(p):
+                    digit = (i // st) % r
+                    j = i + ((digit + off) % r - digit) * st
+                    perm.append((i, j))
+                    start, _ = regions[i]
+                    parent = start - digit * sub
+                    send[i] = _chunk_range(start, sub)
+                    # the arriving block was digit (digit−off) of the parent
+                    recv[i] = _chunk_range(parent + ((digit - off) % r) * sub, sub)
+                xfers.append(Transfer(tuple(perm), send, recv, reduce=False))
+            for i in range(p):
+                start, _ = regions[i]
+                digit = (i // st) % r
+                regions[i] = (start - digit * sub, sub * r)
+            tables.append(tuple(xfers))
+        return tuple(tables)
+
+    return Schedule(f"lumorph{radix}", chips, tuple(rounds), n_bytes,
+                    n_chunks=max(p, 1), _fill=fill if radices else None)
 
 
 def tree_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
@@ -398,29 +554,40 @@ def tree_schedule(chips: Sequence[int], n_bytes: float) -> Schedule:
     the closed form in ``cost_model.tree_all_reduce_cost`` mirrors this.
     Works for any p (ranks ≥ p simply never appear in a perm).
     """
+    chips = tuple(chips)
     p = len(chips)
     rounds: list[Round] = []
+    fill = None
     if p > 1:
+        arr = np.asarray(chips, dtype=np.int64)
         steps = math.ceil(math.log2(p))
-        zeros = np.zeros((p, 1), dtype=np.int32)
         levels = []
         for k in range(steps):
-            senders = [i for i in range(p)
-                       if i % (1 << (k + 1)) == (1 << k)]
-            levels.append((k, tuple(senders)))
+            senders = np.asarray([i for i in range(p)
+                                  if i % (1 << (k + 1)) == (1 << k)])
+            levels.append((k, senders))
         for k, senders in levels:  # reduce toward rank 0
-            perm = tuple((i, i - (1 << k)) for i in senders)
-            pairs = tuple((chips[i], chips[i - (1 << k)]) for i in senders)
-            rounds.append(Round(pairs=pairs, bytes_per_circuit=n_bytes,
-                                transfers=(Transfer(perm, zeros, zeros,
-                                                    reduce=True),)))
+            rounds.append(Round(
+                np.stack([arr[senders], arr[senders - (1 << k)]], axis=1),
+                n_bytes, reduce=True))
         for k, senders in reversed(levels):  # broadcast back
-            perm = tuple((i - (1 << k), i) for i in senders)
-            pairs = tuple((chips[i - (1 << k)], chips[i]) for i in senders)
-            rounds.append(Round(pairs=pairs, bytes_per_circuit=n_bytes,
-                                transfers=(Transfer(perm, zeros, zeros,
-                                                    reduce=False),)))
-    return Schedule("tree", tuple(chips), tuple(rounds), n_bytes, n_chunks=1)
+            rounds.append(Round(
+                np.stack([arr[senders - (1 << k)], arr[senders]], axis=1),
+                n_bytes, reduce=False))
+
+        def fill():
+            zeros = np.zeros((p, 1), dtype=np.int32)
+            tables = []
+            for k, senders in levels:
+                perm = tuple((int(i), int(i) - (1 << k)) for i in senders)
+                tables.append((Transfer(perm, zeros, zeros, reduce=True),))
+            for k, senders in reversed(levels):
+                perm = tuple((int(i) - (1 << k), int(i)) for i in senders)
+                tables.append((Transfer(perm, zeros, zeros, reduce=False),))
+            return tuple(tables)
+
+    return Schedule("tree", chips, tuple(rounds), n_bytes, n_chunks=1,
+                    _fill=fill)
 
 
 def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
@@ -446,21 +613,27 @@ def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
                     chips.append(c)
     rank = {c: i for i, c in enumerate(chips)}
     p = len(chips)
-    zeros = np.zeros((max(p, 1), 1), dtype=np.int32)
     rounds = []
+    perms = []
     for wave in move_rounds:
         if not wave:
             continue
         fanout: dict[int, int] = {}
         for s, _ in wave:
             fanout[s] = fanout.get(s, 0) + 1
-        perm = tuple((rank[s], rank[d]) for s, d in wave)
-        rounds.append(Round(pairs=tuple(wave), bytes_per_circuit=bytes_per_move,
-                            egress_fanout=max(fanout.values()),
-                            transfers=(Transfer(perm, zeros, zeros,
-                                                reduce=False),)))
+        perms.append(tuple((rank[s], rank[d]) for s, d in wave))
+        rounds.append(Round(np.asarray(list(wave), dtype=np.int64),
+                            bytes_per_move, egress_fanout=max(fanout.values()),
+                            reduce=False))
+
+    def fill():
+        zeros = np.zeros((max(p, 1), 1), dtype=np.int32)
+        return tuple((Transfer(perm, zeros, zeros, reduce=False),)
+                     for perm in perms)
+
     return Schedule(tag, tuple(chips), tuple(rounds),
-                    n_bytes=bytes_per_move, n_chunks=1)
+                    n_bytes=bytes_per_move, n_chunks=1,
+                    _fill=fill if rounds else None)
 
 
 # ---------------------------------------------------------------------------
@@ -469,19 +642,18 @@ def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
 
 def _split_phases(sched: Schedule) -> tuple[list[Round], list[Round]]:
     """Split an ALLREDUCE schedule into its reduce-scatter prefix and
-    all-gather suffix.  Every builder in this module emits that shape;
-    anything else (interleaved phases, rounds without transfers) cannot
-    anchor a hierarchical composition and raises."""
+    all-gather suffix using the rounds' shape-level phase tags.  Every
+    builder in this module emits that shape; anything else (interleaved
+    phases, untagged rounds) cannot anchor a hierarchical composition and
+    raises."""
     rs: list[Round] = []
     ag: list[Round] = []
     for r in sched.rounds:
-        if not r.transfers:
+        if r.reduce is None:
             raise ValueError(
-                f"{sched.algo}: round without a transfer lowering cannot be composed")
-        flags = {t.reduce for t in r.transfers}
-        if len(flags) != 1:
-            raise ValueError(f"{sched.algo}: mixed reduce/overwrite round")
-        if flags == {True}:
+                f"{sched.algo}: round without a phase-tagged lowering "
+                "cannot be composed")
+        if r.reduce:
             if ag:
                 raise ValueError(f"{sched.algo}: reduce round after all-gather began")
             rs.append(r)
@@ -497,15 +669,24 @@ def _expand_chunks(ids: np.ndarray, factor: int) -> np.ndarray:
     return out.reshape(ids.shape[0], -1).astype(np.int32)
 
 
-def _merge_racks(rounds_by_rack: Sequence[Round], m: int, factor: int) -> Round:
-    """One pod-wide round from structurally identical per-rack rounds: all
-    racks run their local round simultaneously.  Rank spaces concatenate
-    (rack ``r``'s local rank ``i`` → global rank ``r·m + i``) and chunk
-    ids expand to the composed schedule's finer granularity."""
+def _merge_rack_shapes(rounds_by_rack: Sequence[Round]) -> Round:
+    """One pod-wide round shape from structurally identical per-rack
+    rounds: all racks run their local round simultaneously (pair arrays
+    concatenate in rack order)."""
+    r0 = rounds_by_rack[0]
+    return Round(np.concatenate([r.pairs_arr for r in rounds_by_rack], axis=0),
+                 r0.bytes_per_circuit, egress_fanout=r0.egress_fanout,
+                 reduce=r0.reduce)
+
+
+def _merge_rack_transfers(rounds_by_rack: Sequence[Round], m: int,
+                          factor: int) -> tuple[Transfer, ...]:
+    """Merged transfer tables of one pod-wide round: rank spaces
+    concatenate (rack ``r``'s local rank ``i`` → global rank ``r·m + i``)
+    and chunk ids expand to the composed schedule's finer granularity."""
     r0 = rounds_by_rack[0]
     if any(len(r.transfers) != len(r0.transfers) for r in rounds_by_rack):
         raise ValueError("per-rack rounds disagree on transfer structure")
-    pairs = tuple(p for rnd in rounds_by_rack for p in rnd.pairs)
     transfers = []
     for u in range(len(r0.transfers)):
         perm = tuple((r * m + s, r * m + d)
@@ -516,8 +697,7 @@ def _merge_racks(rounds_by_rack: Sequence[Round], m: int, factor: int) -> Round:
         recv = np.vstack([_expand_chunks(rnd.transfers[u].recv, factor)
                           for rnd in rounds_by_rack])
         transfers.append(Transfer(perm, send, recv, r0.transfers[u].reduce))
-    return Round(pairs=pairs, bytes_per_circuit=r0.bytes_per_circuit,
-                 egress_fanout=r0.egress_fanout, transfers=tuple(transfers))
+    return tuple(transfers)
 
 
 def compose_hierarchical(intra: Sequence[Schedule],
@@ -528,7 +708,7 @@ def compose_hierarchical(intra: Sequence[Schedule],
     builder over the *same* participant count ``m`` on disjoint chips, so
     after their reduce-scatter prefix, corresponding local ranks own the
     same chunk region (the symmetry the inter stage relies on; it is
-    asserted, not assumed).  The composed program is:
+    asserted at materialization, not assumed).  The composed program is:
 
       1. every rack runs its reduce-scatter rounds simultaneously
          (merged rank spaces, chunk ids refined ``R``-fold);
@@ -542,8 +722,9 @@ def compose_hierarchical(intra: Sequence[Schedule],
 
     The result is an ordinary :class:`Schedule`: `compile_schedule` can
     execute it, :meth:`Schedule.cost` prices it per tier against a
-    :class:`~repro.core.rack.Pod`, and the simulator treats it like any
-    other candidate algorithm.
+    :class:`~repro.core.rack.Pod` — from the shape alone, without ever
+    materializing the per-rack Transfer tables — and the simulator treats
+    it like any other candidate algorithm.
     """
     intra = tuple(intra)
     if not intra:
@@ -573,38 +754,63 @@ def compose_hierarchical(intra: Sequence[Schedule],
     if (len({len(rs) for rs, _ in splits}) != 1
             or len({len(ag) for _, ag in splits}) != 1):
         raise ValueError("per-rack schedules disagree on phase structure")
+    n_rs, n_ag = len(splits[0][0]), len(splits[0][1])
     rounds: list[Round] = []
-    for j in range(len(splits[0][0])):  # simultaneous per-rack reduce-scatter
-        rounds.append(_merge_racks([splits[r][0][j] for r in range(R)], m, R))
-    # chunk region each local rank owns after its rack's reduce-scatter:
-    # the last reduce round's recv row (what the rank accumulated last) —
-    # identical across racks by builder symmetry, asserted here
-    if splits[0][0]:
-        own = np.asarray(splits[0][0][-1].transfers[0].recv, dtype=np.int64)
-        for rs, _ in splits[1:]:
-            if not np.array_equal(rs[-1].transfers[0].recv, own):
-                raise ValueError("per-rack reduce-scatters own different regions")
-    else:  # m == 1: the single local rank owns the whole (1-chunk) buffer
-        own = np.zeros((m, 1), dtype=np.int64)
-    w = own.shape[1]
+    for j in range(n_rs):  # simultaneous per-rack reduce-scatter
+        rounds.append(_merge_rack_shapes([splits[r][0][j] for r in range(R)]))
+    # after its rack's reduce-scatter each local rank owns exactly one
+    # intra chunk (n_chunks == m is enforced above; m == 1 owns its single
+    # chunk trivially) — asserted against the tables at materialization
+    w = 1
     perm = tuple((r * m + i, ((r + 1) % R) * m + i)
                  for r in range(R) for i in range(m))
-    pairs = tuple((chips[s], chips[d]) for s, d in perm)
+    inter_pairs = np.asarray(chips, dtype=np.int64)[
+        np.asarray(perm, dtype=np.int64).reshape(-1, 2)]
     sub_bytes = first.n_bytes / K
-    for t in range(R - 1):  # inter reduce-scatter (ring over racks)
-        send = np.vstack([own * R + (r - t) % R for r in range(R)]).astype(np.int32)
-        recv = np.vstack([own * R + (r - t - 1) % R for r in range(R)]).astype(np.int32)
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=w * sub_bytes, tier=1,
-                            transfers=(Transfer(perm, send, recv, reduce=True),)))
-    for t in range(R - 1):  # inter all-gather (mirror; same circuits)
-        send = np.vstack([own * R + (r + 1 - t) % R for r in range(R)]).astype(np.int32)
-        recv = np.vstack([own * R + (r - t) % R for r in range(R)]).astype(np.int32)
-        rounds.append(Round(pairs=pairs, bytes_per_circuit=w * sub_bytes, tier=1,
-                            transfers=(Transfer(perm, send, recv, reduce=False),)))
-    for j in range(len(splits[0][1])):  # simultaneous per-rack all-gather
-        rounds.append(_merge_racks([splits[r][1][j] for r in range(R)], m, R))
+    for _ in range(R - 1):  # inter reduce-scatter (ring over racks)
+        rounds.append(Round(inter_pairs, w * sub_bytes, tier=1, reduce=True))
+    for _ in range(R - 1):  # inter all-gather (mirror; same circuits)
+        rounds.append(Round(inter_pairs, w * sub_bytes, tier=1, reduce=False))
+    for j in range(n_ag):  # simultaneous per-rack all-gather
+        rounds.append(_merge_rack_shapes([splits[r][1][j] for r in range(R)]))
+
+    def fill():
+        for s in intra:
+            s.materialize()
+        tables: list[tuple[Transfer, ...]] = []
+        for j in range(n_rs):
+            tables.append(_merge_rack_transfers(
+                [splits[r][0][j] for r in range(R)], m, R))
+        # chunk region each local rank owns after its rack's reduce-scatter:
+        # the last reduce round's recv row (what the rank accumulated last)
+        # — identical across racks by builder symmetry, asserted here
+        if splits[0][0]:
+            own = np.asarray(splits[0][0][-1].transfers[0].recv, dtype=np.int64)
+            for rs, _ in splits[1:]:
+                if not np.array_equal(rs[-1].transfers[0].recv, own):
+                    raise ValueError("per-rack reduce-scatters own different regions")
+        else:  # m == 1: the single local rank owns the whole (1-chunk) buffer
+            own = np.zeros((m, 1), dtype=np.int64)
+        assert own.shape[1] == w, "composed inter stage assumes 1-chunk regions"
+        for t in range(R - 1):  # inter reduce-scatter
+            send = np.vstack([own * R + (r - t) % R
+                              for r in range(R)]).astype(np.int32)
+            recv = np.vstack([own * R + (r - t - 1) % R
+                              for r in range(R)]).astype(np.int32)
+            tables.append((Transfer(perm, send, recv, reduce=True),))
+        for t in range(R - 1):  # inter all-gather
+            send = np.vstack([own * R + (r + 1 - t) % R
+                              for r in range(R)]).astype(np.int32)
+            recv = np.vstack([own * R + (r - t) % R
+                              for r in range(R)]).astype(np.int32)
+            tables.append((Transfer(perm, send, recv, reduce=False),))
+        for j in range(n_ag):
+            tables.append(_merge_rack_transfers(
+                [splits[r][1][j] for r in range(R)], m, R))
+        return tuple(tables)
+
     return Schedule(f"hier:{first.algo}:{inter}", chips, tuple(rounds),
-                    first.n_bytes, n_chunks=K)
+                    first.n_bytes, n_chunks=K, _fill=fill)
 
 
 def hierarchical_schedule(chips: Sequence[int], n_bytes: float,
@@ -683,7 +889,7 @@ def fiber_demand(schedule: Schedule, tiles_per_server: int,
     (cross-rack circuits excluded when ``chips_per_rack`` is given)."""
     peak = 0
     for r in schedule.rounds:
-        peak = max(peak, _round_fiber_demand(r.pairs, tiles_per_server,
+        peak = max(peak, _round_fiber_demand(r.pairs_arr, tiles_per_server,
                                              chips_per_rack=chips_per_rack))
     return peak
 
@@ -692,7 +898,7 @@ def rail_demand(schedule: Schedule, chips_per_rack: int) -> int:
     """Peak per-rack-pair rail demand across the schedule's rounds."""
     peak = 0
     for r in schedule.rounds:
-        peak = max(peak, _round_rail_demand(r.pairs, chips_per_rack))
+        peak = max(peak, _round_rail_demand(r.pairs_arr, chips_per_rack))
     return peak
 
 

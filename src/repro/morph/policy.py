@@ -23,6 +23,7 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.cost_model import LinkModel
 from repro.core.fabric import CircuitError, LumorphRack
+from repro.core.pricing import SchedulePricer
 from repro.core.scheduler import (build_any_schedule, candidate_algos,
                                   order_for_locality)
 from repro.morph.plan import (MorphCost, MorphPlan, plan_bypass,
@@ -66,16 +67,20 @@ class PricedMorph:
 class MorphPolicy:
     """Prices candidate morphs against a rack model and a link model.
 
-    ``price`` lets a caller inject its own (cached) schedule-pricing
-    function — the rack simulator shares its LRU so policy decisions and
-    simulated collectives are priced by literally the same numbers.
+    ``pricer`` lets a caller share its
+    :class:`~repro.core.pricing.SchedulePricer` — the rack simulator
+    passes its own, so policy decisions and simulated collectives are
+    priced by literally the same cache (canonical layouts, lower-bound
+    pruning and all).  ``price`` injects a bare pricing function instead
+    (no pruning) for callers that want full control.
     """
 
     def __init__(self, config: MorphConfig, rack: LumorphRack,
                  link: LinkModel, algos: Sequence[str],
                  tiles_per_server: int,
                  price: Optional[PriceFn] = None,
-                 chips_per_rack: Optional[int] = None):
+                 chips_per_rack: Optional[int] = None,
+                 pricer: Optional[SchedulePricer] = None):
         self.config = config
         self.rack = rack
         self.link = link
@@ -84,6 +89,12 @@ class MorphPolicy:
         #: pod morphs: rack granularity for same-rack-preferring targets
         #: and hierarchical collective candidates (None = single rack)
         self.chips_per_rack = chips_per_rack
+        self.pricer = pricer
+        #: an explicitly injected price function takes precedence over the
+        #: shared pricer everywhere (including step_cost's pruned path)
+        self._explicit_price = price is not None
+        if price is None and pricer is not None:
+            price = pricer.price
         self._price = price or self._default_price
 
     # -- pricing -------------------------------------------------------------
@@ -113,6 +124,11 @@ class MorphPolicy:
                                            self.tiles_per_server,
                                            chips_per_rack=self.chips_per_rack))
         algos = candidate_algos(self.algos, ordered, self.chips_per_rack)
+        if self.pricer is not None and not self._explicit_price:
+            # shared fast path: bound-and-prune over the same cache the
+            # simulator prices steps from (identical minima by the lower-
+            # bound contract)
+            return self.pricer.cheapest(algos, ordered, n_bytes)
         return min(self._price(a, ordered, n_bytes) for a in algos)
 
     def _state_bytes(self, coll_bytes: float) -> float:

@@ -15,8 +15,12 @@ against one allocator *discipline*:
     limits, and rounds whose inter-server circuit demand exceeds the
     fiber budget are charged fiber time-sharing — so placement quality
     shows up in the Fig 2a/4b-style results.  The discipline picks the
-    cheapest admissible algorithm per job; schedules are LRU-cached on
-    ``(algo, chips, n_bytes)`` to keep long traces fast.
+    cheapest admissible algorithm per job through the shared
+    :class:`~repro.core.pricing.SchedulePricer`: candidates are ranked
+    by closed-form lower bounds (hopeless ones pruned before any IR is
+    built), prices are LRU-cached on ``(algo, canonical layout,
+    n_bytes)`` so isomorphic placements share entries, and pricing never
+    materializes Transfer tables — see ``docs/performance.md``.
   * **failure** — chips die permanently.  With morphing enabled the
     engine first tries a **failure bypass** (:mod:`repro.morph`): swap a
     free chip into the slice and replay the lost shard state from a
@@ -47,16 +51,16 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from collections import OrderedDict
 from typing import Optional, Sequence
 
 from repro.core import cost_model as cm
 from repro.core.allocator import (AllocationError, BaseAllocator,
                                   PodAllocator, make_allocator)
-from repro.core.fabric import CircuitError, LumorphRack
+from repro.core.fabric import LumorphRack
+from repro.core.pricing import SchedulePricer
 from repro.core.rack import Pod
-from repro.core.scheduler import (build_any_schedule, candidate_algos,
-                                  order_for_locality)
+from repro.core.scheduler import (candidate_algos, order_for_locality,
+                                  transfer_tables_built)
 from repro.morph import MorphConfig, MorphPolicy, PricedMorph, apply_plan
 from repro.runtime.fault_tolerance import reallocate_after_failure
 from repro.sim.metrics import SimMetrics, TenantRecord
@@ -131,8 +135,9 @@ class _Job:
 class RackSimulator:
     """Replay one trace against one discipline; returns :class:`SimMetrics`."""
 
-    #: schedules cached per (algo, chips, n_bytes); a rack trace repeats the
-    #: same tenant shapes thousands of times, so hits dominate
+    #: bound on the shared pricer's LRU, keyed (algo, canonical layout,
+    #: n_bytes); a rack trace repeats the same tenant shapes — on the
+    #: same or isomorphic chips — thousands of times, so hits dominate
     SCHED_CACHE_SIZE = 4096
 
     def __init__(self, discipline: Discipline | str, trace: Trace,
@@ -192,7 +197,16 @@ class RackSimulator:
                 n_servers=max(1, math.ceil(self.n_chips / tiles_per_server)),
                 tiles_per_server=tiles_per_server,
                 fibers_per_server_pair=fibers_per_server_pair)
-        self._sched_cache: OrderedDict[tuple, float] = OrderedDict()
+        #: schedule pricer shared by the engine and the morph policy:
+        #: bounded LRU on canonical layouts, bound-and-prune candidate
+        #: search, hit/miss counters (surfaced in SimMetrics) — see
+        #: ``repro.core.pricing``
+        self.pricer = SchedulePricer(
+            link=self.discipline.link, rack=self.rack,
+            tiles_per_server=tiles_per_server,
+            chips_per_rack=self.chips_per_rack,
+            cache_size=self.SCHED_CACHE_SIZE)
+        self._transfer_tables_at_start = transfer_tables_built()
         #: online slice morphing (repro.morph): compaction on departure,
         #: bypass on failure.  Only meaningful on a reconfigurable photonic
         #: fabric — ignored for fixed electrical disciplines, so `compare`
@@ -204,7 +218,7 @@ class RackSimulator:
                                      link=self.discipline.link,
                                      algos=self.discipline.algos,
                                      tiles_per_server=tiles_per_server,
-                                     price=self._algo_cost,
+                                     pricer=self.pricer,
                                      chips_per_rack=self.chips_per_rack)
         self.now = 0.0
         self.dead: set[int] = set()
@@ -291,36 +305,11 @@ class RackSimulator:
     # -- pricing -------------------------------------------------------------
     def _algo_cost(self, algo: str, chips: tuple[int, ...],
                    n_bytes: float) -> float:
-        """Price one algorithm (flat or ``hier:*``) on one concrete chip
-        set via the Schedule IR (photonic disciplines only):
-        TRX-infeasible schedules are inadmissible (``inf``), fiber — and
-        in pod mode rail — shortage is charged as time-sharing.
-        LRU-cached — tenants re-price the same schedule every step.
-        """
-        key = (algo, chips, n_bytes)
-        cached = self._sched_cache.get(key)
-        if cached is not None:
-            self._sched_cache.move_to_end(key)
-            return cached
-        try:
-            sched = build_any_schedule(algo, chips, n_bytes,
-                                       chips_per_rack=self.chips_per_rack)
-        except ValueError:
-            if not algo.startswith("hier:"):
-                raise  # a flat-builder bug must fail loudly, not price inf
-            # hier candidate went inadmissible (e.g. rack shares turned
-            # unequal after a re-slice)
-            cost = float("inf")
-        else:
-            try:
-                sched.validate(self.rack, check_fibers=False)
-                cost = sched.cost(self.discipline.link, rack=self.rack)
-            except CircuitError:
-                cost = float("inf")  # e.g. egress fanout > TRX banks
-        self._sched_cache[key] = cost
-        if len(self._sched_cache) > self.SCHED_CACHE_SIZE:
-            self._sched_cache.popitem(last=False)
-        return cost
+        """Thin alias of ``self.pricer.price`` (see
+        :class:`~repro.core.pricing.SchedulePricer` for semantics), kept
+        for tests and external callers probing individual candidates —
+        the engine itself prices through ``pricer.cheapest``."""
+        return self.pricer.price(algo, chips, n_bytes)
 
     def _collective_s(self, job: _Job) -> float:
         p = job.width
@@ -343,9 +332,10 @@ class RackSimulator:
                 job.chips[:p], self.tiles_per_server,
                 chips_per_rack=self.chips_per_rack))
         chips = job.ordered
-        cost = min(self._algo_cost(a, chips, job.spec.coll_bytes)
-                   for a in candidate_algos(self.discipline.algos, chips,
-                                            self.chips_per_rack))
+        cost = self.pricer.cheapest(
+            candidate_algos(self.discipline.algos, chips,
+                            self.chips_per_rack),
+            chips, job.spec.coll_bytes)
         assert cost != float("inf"), \
             f"no admissible collective for {job.spec.tenant} on {chips}"
         return cost
@@ -546,6 +536,17 @@ class RackSimulator:
             if self.check_invariants:
                 self._check()
         self.metrics.horizon = self.now
+        # pricing fast-path accounting (satellite of the lazy-IR work):
+        # cache hit rate, schedules built, candidates pruned, and how many
+        # Transfer tables this run materialized (steady-state pricing must
+        # materialize none — execution is the only legitimate consumer)
+        st = self.pricer.stats
+        self.metrics.sched_cache_hits = st.hits
+        self.metrics.sched_cache_misses = st.misses
+        self.metrics.schedules_built = st.built
+        self.metrics.candidates_pruned = st.pruned
+        self.metrics.transfers_materialized = (
+            transfer_tables_built() - self._transfer_tables_at_start)
         return self.metrics
 
 

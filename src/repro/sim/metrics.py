@@ -81,6 +81,15 @@ class SimMetrics:
         #: contribute nothing)
         self.stranded_chip_seconds = 0.0
         self.horizon = 0.0  # last event time
+        # pricing fast path (repro.core.pricing), filled by the engine at
+        # the end of run(); kept out of summary() so golden fixtures pin
+        # simulation *semantics*, not planner implementation detail —
+        # read them via pricing_summary()
+        self.sched_cache_hits = 0
+        self.sched_cache_misses = 0
+        self.schedules_built = 0  # Schedule IRs constructed (cache misses)
+        self.candidates_pruned = 0  # candidates skipped by lower bounds
+        self.transfers_materialized = 0  # must stay 0: pricing is shape-only
         # per-tenant
         self.tenants: dict[str, TenantRecord] = {}
         self._collective_samples = 0
@@ -170,6 +179,27 @@ class SimMetrics:
     def compaction_gain_s(self) -> float:
         """Per-step collective seconds saved across all compactions."""
         return self.compaction_step_s_before - self.compaction_step_s_after
+
+    @property
+    def sched_cache_hit_rate(self) -> float:
+        """Fraction of schedule-pricing lookups served from the pricer's
+        canonical-layout cache."""
+        total = self.sched_cache_hits + self.sched_cache_misses
+        return self.sched_cache_hits / total if total else 0.0
+
+    def pricing_summary(self) -> dict:
+        """Planner fast-path counters (separate from :meth:`summary` so
+        the bit-exact golden fixtures keep pinning simulation semantics
+        only).  ``transfers_materialized`` must be 0 for any run that
+        only prices — Transfer tables exist for execution alone."""
+        return {
+            "sched_cache_hits": self.sched_cache_hits,
+            "sched_cache_misses": self.sched_cache_misses,
+            "sched_cache_hit_rate": round(self.sched_cache_hit_rate, 6),
+            "schedules_built": self.schedules_built,
+            "candidates_pruned": self.candidates_pruned,
+            "transfers_materialized": self.transfers_materialized,
+        }
 
     @property
     def mean_jct(self) -> float:

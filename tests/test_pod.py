@@ -49,6 +49,7 @@ def _pod_chips(n_racks: int, m: int, chips_per_rack: int) -> tuple[int, ...]:
 
 def _check_program(sched, p: int) -> None:
     """Schedule-IR well-formedness (mirrors test_schedule_ir's contract)."""
+    sched.materialize()  # transfers are lazy; inspecting them builds them
     chips = sched.participants
     assert len(chips) == p
     for rnd in sched.rounds:

@@ -1,0 +1,316 @@
+"""Pricing fast path: the lazy/canonical/pruned planner must be
+*invisible* to every consumer of schedule prices.
+
+Four contracts, each pinned exactly (``==``, not approx — the golden
+traces rely on bit-identical pricing):
+
+  * **lazy ≡ eager** — a schedule's cost is identical before and after
+    its Transfer tables are materialized, for every algorithm (flat and
+    hierarchical) × width × pod geometry, and pricing alone never
+    materializes;
+  * **canonical ≡ literal** — isomorphic layouts (racks/servers/tiles
+    renamed) share one canonical form and price identically, so the
+    canonical-key cache can never serve a wrong price;
+  * **bounds are lower bounds** — the closed-form bounds used for
+    pruning never exceed the true rack-priced cost, hence
+  * **pruned min ≡ full min** — ``SchedulePricer.cheapest`` equals the
+    plain minimum over all candidates.
+
+Plus the engine-facing satellite: a churn trace's steady state
+materializes zero Transfer tables and reports its cache accounting.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.pricing import SchedulePricer, canonical_layout
+from repro.core.rack import Pod
+from repro.core.scheduler import (SCHEDULE_BUILDERS, build_any_schedule,
+                                  candidate_algos, order_for_locality,
+                                  transfer_tables_built)
+from repro.sim import RackSimulator
+from repro.sim.workload import fig2a_trace, pod_churn_trace
+
+ALGOS = tuple(sorted(SCHEDULE_BUILDERS))
+TILES = 8
+
+
+def _pod(n_racks: int, cpr: int) -> Pod:
+    return Pod(n_racks=n_racks, chips_per_rack=cpr,
+               fibers_per_server_pair=4 * TILES)
+
+
+def _spanning_chips(p: int, n_racks: int, cpr: int) -> tuple[int, ...]:
+    share = p // n_racks
+    return tuple(r * cpr + i for r in range(n_racks) for i in range(share))
+
+
+# ---------------------------------------------------------------------------
+# lazy shape pricing ≡ eager materialized pricing
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(ALGOS), st.integers(2, 64), st.floats(1e3, 1e9),
+       st.sampled_from([(2, 64), (4, 32)]))
+@settings(max_examples=100, deadline=None)
+def test_lazy_cost_equals_materialized_cost(algo, p, n_bytes, geom):
+    """Materializing the Transfer tables must not change a single priced
+    bit — shape is the whole pricing surface."""
+    n_racks, cpr = geom
+    pod = _pod(n_racks, cpr)
+    chips = tuple(range(p))
+    sched = build_any_schedule(algo, chips, n_bytes, chips_per_rack=cpr)
+    before = transfer_tables_built()
+    lazy_plain = sched.cost(cm.LUMORPH_LINK)
+    lazy_rack = sched.cost(cm.LUMORPH_LINK, rack=pod)
+    lazy_tiers = sched.cost_by_tier(cm.LUMORPH_LINK, rack=pod)
+    lazy_reconf = sched.reconfigurations()
+    assert transfer_tables_built() == before, "pricing materialized tables"
+    sched.materialize()
+    assert sched.cost(cm.LUMORPH_LINK) == lazy_plain
+    assert sched.cost(cm.LUMORPH_LINK, rack=pod) == lazy_rack
+    assert sched.cost_by_tier(cm.LUMORPH_LINK, rack=pod) == lazy_tiers
+    assert sched.reconfigurations() == lazy_reconf
+
+
+@given(st.sampled_from(["ring", "lumorph2", "lumorph4", "hier:ring",
+                        "hier:lumorph2", "hier:lumorph4"]),
+       st.sampled_from([2, 4, 8, 16]), st.integers(2, 4))
+@settings(max_examples=60, deadline=None)
+def test_shape_phase_tags_match_transfer_flags(algo, m, n_racks):
+    """A round's shape-level ``reduce`` tag equals its (materialized)
+    transfers' reduce flags — composition splits phases on the tag, so a
+    mismatch would silently corrupt hierarchical programs."""
+    cpr = 32
+    chips = _spanning_chips(m * n_racks, n_racks, cpr)
+    sched = build_any_schedule(algo, chips, 1e6, chips_per_rack=cpr)
+    sched.materialize()
+    for rnd in sched.rounds:
+        flags = {t.reduce for t in rnd.transfers}
+        assert flags == {rnd.reduce}
+
+
+# ---------------------------------------------------------------------------
+# canonical layouts
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 32))
+@settings(max_examples=60, deadline=None)
+def test_canonical_pricing_equals_literal_single_rack(seed, p):
+    """Randomly scattered layout vs a server-renamed isomorph: same
+    canonical form, bit-identical prices for every algorithm."""
+    rng = np.random.RandomState(seed)
+    servers = rng.permutation(16)[: -(-p // TILES)]
+    chips = []
+    for i, s in enumerate(servers):
+        take = min(TILES, p - len(chips))
+        chips.extend(int(s) * TILES + t for t in range(take))
+    chips = tuple(chips)
+    # isomorph: shift every server id by a permutation
+    shift = {int(s): int(x) for s, x in zip(servers, rng.permutation(32)[:len(servers)])}
+    iso = tuple(shift[c // TILES] * TILES + c % TILES for c in chips)
+    a = canonical_layout(order_for_locality(chips, TILES), TILES)
+    b = canonical_layout(order_for_locality(iso, TILES), TILES)
+    assert a == b
+    from repro.core.fabric import LumorphRack
+    rack = LumorphRack(n_servers=40, tiles_per_server=TILES,
+                       fibers_per_server_pair=4)
+    for algo in ("ring", "lumorph2", "lumorph4"):
+        pa = SchedulePricer(cm.LUMORPH_LINK, rack=rack, canonical=False)
+        ca = SchedulePricer(cm.LUMORPH_LINK, rack=rack, canonical=True)
+        lit = pa.price(algo, tuple(order_for_locality(chips, TILES)), 1e7)
+        can = ca.price(algo, tuple(order_for_locality(iso, TILES)), 1e7)
+        assert lit == can, (algo, chips, iso)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([2, 4, 8, 16, 32]),
+       st.integers(2, 4))
+@settings(max_examples=40, deadline=None)
+def test_canonical_pricing_equals_literal_pod(seed, m, n_racks):
+    """Rack-spanning slices: renaming racks and shifting per-rack shares
+    preserves the canonical form and every candidate's price (including
+    the hierarchical compositions)."""
+    rng = np.random.RandomState(seed)
+    cpr = 64
+    pod = _pod(4, cpr)
+    base = _spanning_chips(m * n_racks, n_racks, cpr)
+    # isomorph: permute which physical racks host the shares and shift
+    # each share by a whole-server offset inside its rack
+    rack_ids = list(rng.permutation(4)[:n_racks])
+    offs = [int(rng.randint(0, (cpr - m) // TILES + 1)) * TILES
+            for _ in range(n_racks)]
+    iso = tuple(int(rack_ids[r]) * cpr + offs[r] + i
+                for r in range(n_racks) for i in range(m))
+    ob = tuple(order_for_locality(base, TILES, chips_per_rack=cpr))
+    oi = tuple(order_for_locality(iso, TILES, chips_per_rack=cpr))
+    assert canonical_layout(ob, TILES, cpr) == canonical_layout(oi, TILES, cpr)
+    lit = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr,
+                         canonical=False, prune=False)
+    can = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr,
+                         canonical=True, prune=False)
+    for algo in candidate_algos(("ring", "lumorph2", "lumorph4"), ob, cpr):
+        assert lit.price(algo, ob, 4e6) == can.price(algo, oi, 4e6), algo
+
+
+# ---------------------------------------------------------------------------
+# lower bounds + pruning
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([2, 3, 4, 6, 8, 16, 32]),
+       st.integers(1, 4), st.floats(1e3, 1e9))
+@settings(max_examples=80, deadline=None)
+def test_lower_bounds_never_exceed_price(seed, m, n_racks, n_bytes):
+    """Every pruning bound ≤ the true rack-priced cost (the invariant
+    that makes pruning exact)."""
+    rng = np.random.RandomState(seed)
+    cpr = 64
+    pod = _pod(4, cpr)
+    chips = _spanning_chips(m * n_racks, n_racks, cpr)
+    off = int(rng.randint(0, 3)) * TILES
+    chips = tuple(c + off for c in chips)
+    ordered = tuple(order_for_locality(chips, TILES, chips_per_rack=cpr))
+    pricer = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr)
+    for algo in candidate_algos(("ring", "lumorph2", "lumorph4", "tree"),
+                                ordered, cpr):
+        bound = pricer.lower_bound(algo, ordered, n_bytes)
+        price = pricer.price(algo, ordered, n_bytes)
+        assert bound <= price, (algo, bound, price)
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from([2, 4, 8, 16, 32]),
+       st.integers(1, 4), st.floats(1e3, 1e9))
+@settings(max_examples=60, deadline=None)
+def test_pruned_cheapest_equals_full_min(seed, m, n_racks, n_bytes):
+    cpr = 64
+    pod = _pod(4, cpr)
+    chips = _spanning_chips(m * n_racks, n_racks, cpr)
+    ordered = tuple(order_for_locality(chips, TILES, chips_per_rack=cpr))
+    cands = candidate_algos(("ring", "lumorph2", "lumorph4"), ordered, cpr)
+    pruned = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr,
+                            prune=True)
+    full = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr,
+                          prune=False)
+    assert pruned.cheapest(cands, ordered, n_bytes) == \
+        full.cheapest(cands, ordered, n_bytes)
+
+
+def test_pricer_cache_is_bounded_and_counted():
+    pricer = SchedulePricer(cm.LUMORPH_LINK, cache_size=4, canonical=False)
+    for i in range(8):
+        pricer.price("ring", tuple(range(i * 8, i * 8 + 4)), 1e6)
+    assert len(pricer) == 4  # LRU evicted down to the bound
+    assert pricer.stats.misses == 8 and pricer.stats.hits == 0
+    pricer.price("ring", tuple(range(56, 60)), 1e6)  # most recent entry
+    assert pricer.stats.hits == 1
+    pricer.clear()
+    assert len(pricer) == 0
+
+
+def test_canonical_cache_shares_isomorphic_entries():
+    """The churn case in miniature: the same slice shape on shifted chips
+    is one cache entry, not many."""
+    pricer = SchedulePricer(cm.LUMORPH_LINK)
+    for off in range(0, 64, 8):
+        pricer.price("lumorph4", tuple(range(off, off + 8)), 1e6)
+    assert pricer.stats.misses == 1 and pricer.stats.hits == 7
+
+
+def test_clear_pricing_caches_smoke():
+    cm.algorithm_cost("ring", 1e6, 8, cm.LUMORPH_LINK)
+    assert cm._ir_cost.cache_info().currsize > 0
+    cm.clear_pricing_caches()
+    assert cm._ir_cost.cache_info().currsize == 0
+
+
+# ---------------------------------------------------------------------------
+# engine accounting (satellite: cache stats visible, steady state lazy)
+# ---------------------------------------------------------------------------
+
+def test_churn_steady_state_materializes_zero_transfer_tables():
+    """A full churn replay — arrivals, failures, morphs, departures —
+    must price thousands of schedules without building a single Transfer
+    table (execution is the only consumer of chunk tables), and the
+    cache accounting must be visible in SimMetrics."""
+    trace = fig2a_trace(120, failure_rate=0.02, n_chips=64, seed=7)
+    m = RackSimulator("lumorph", trace, n_chips=64,
+                      fibers_per_server_pair=2, morph=True).run()
+    assert m.transfers_materialized == 0
+    assert m.sched_cache_hits + m.sched_cache_misses > 0
+    assert m.schedules_built == m.sched_cache_misses
+    assert 0.0 < m.sched_cache_hit_rate <= 1.0
+    ps = m.pricing_summary()
+    assert ps["transfers_materialized"] == 0
+    assert ps["sched_cache_hit_rate"] == round(m.sched_cache_hit_rate, 6)
+    # pod mode too — hier candidates priced, still zero materialization
+    pod_trace = pod_churn_trace(60, n_chips=64, chips_per_rack=32,
+                                failure_rate=0.02, seed=3)
+    pm = RackSimulator("lumorph", pod_trace, n_chips=64, n_racks=2,
+                       morph=True).run()
+    assert pm.transfers_materialized == 0
+    assert pm.candidates_pruned > 0
+
+
+def test_summary_keys_unchanged_by_pricing_stats():
+    """Golden fixtures pin summary() bit-for-bit; the pricing counters
+    must live next to it, not in it."""
+    trace = fig2a_trace(10, n_chips=64, seed=0)
+    m = RackSimulator("lumorph", trace, n_chips=64).run()
+    assert not any(k.startswith("sched_cache") for k in m.summary())
+    assert "transfers_materialized" not in m.summary()
+
+
+def test_duplicate_circuit_multiplicity_reprices_demand():
+    """Consecutive rounds with the same circuit *set* but different
+    multiplicities must not share β stretch: set equality governs the MZI
+    window (like the old frozenset semantics), element-wise equality
+    governs demand reuse."""
+    from repro.core.fabric import LumorphRack
+    from repro.core.scheduler import Round, Schedule
+
+    rack = LumorphRack(n_servers=2, tiles_per_server=8,
+                       fibers_per_server_pair=1)
+    single = Round([(0, 8)], 1e6, reduce=False)
+    doubled = Round([(0, 8), (0, 8)], 1e6, reduce=False)
+    sched = Schedule("t", (0, 8), (single, doubled), 1e6)
+    tiers = list(sched._priced_rounds(cm.LUMORPH_LINK, rack=rack))
+    beta = cm.LUMORPH_LINK.beta
+    # round 2 reuses circuits (no MZI window: alpha only) but its demand
+    # of 2 circuits over 1 fiber stretches beta 2x
+    assert tiers[0][1] == pytest.approx(
+        cm.LUMORPH_LINK.round_alpha(True) + 1e6 * beta)
+    assert tiers[1][1] == pytest.approx(
+        cm.LUMORPH_LINK.round_alpha(False) + 1e6 * beta * 2)
+    assert sched.reconfigurations() == 1  # set-identical -> one window
+
+
+def test_morph_policy_explicit_price_beats_shared_pricer():
+    """A caller-injected price function must be consulted even when a
+    shared pricer is also supplied (full-control contract)."""
+    from repro.core.fabric import LumorphRack
+    from repro.morph.policy import MorphConfig, MorphPolicy
+
+    rack = LumorphRack(n_servers=8, tiles_per_server=8,
+                       fibers_per_server_pair=32)
+    pricer = SchedulePricer(cm.LUMORPH_LINK, rack=rack)
+    calls = []
+
+    def spy_price(algo, chips, n_bytes):
+        calls.append(algo)
+        return 1.0
+
+    pol = MorphPolicy(MorphConfig(), rack=rack, link=cm.LUMORPH_LINK,
+                      algos=("ring", "lumorph2"), tiles_per_server=8,
+                      price=spy_price, pricer=pricer)
+    assert pol.step_cost(tuple(range(8)), 8, 1e6) == 1.0
+    assert calls  # the injected function, not the pricer, did the pricing
+    assert pricer.stats.hits + pricer.stats.misses == 0
+
+
+def test_round_transfers_raise_before_materialize():
+    from repro.core.scheduler import build_schedule
+    sched = build_schedule("ring", range(4), 1e6)
+    with pytest.raises(RuntimeError, match="materialize"):
+        sched.rounds[0].transfers
+    sched.materialize()
+    assert sched.rounds[0].transfers  # now available

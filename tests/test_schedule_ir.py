@@ -76,9 +76,11 @@ def test_reconfiguration_counts_match_paper(p):
 @settings(max_examples=80, deadline=None)
 def test_transfer_lowering_is_well_formed(algo, p):
     """Each round's transfers: partial permutations whose union is exactly
-    the round's circuit pairs; chunk tables rank-complete and in range."""
+    the round's circuit pairs; chunk tables rank-complete and in range.
+    (Transfer tables are lazy — materialize() is the execution-side step
+    that builds them; pricing never calls it.)"""
     chips = tuple(range(100, 100 + p))  # noncontiguous chip ids
-    sched = build_schedule(algo, chips, 1e6)
+    sched = build_schedule(algo, chips, 1e6).materialize()
     for rnd in sched.rounds:
         from_transfers = []
         for t in rnd.transfers:
