@@ -1,0 +1,8 @@
+"""Chunked/pipelined collective overlap: measured interleaving on the
+8-device fake mesh + the α–β pipelined model gating
+``claim_overlap_speedup`` (see ``bench_collective_exec.run_overlap`` —
+this module is its registry entry in ``benchmarks.run``)."""
+
+from benchmarks.bench_collective_exec import run_overlap as run
+
+__all__ = ["run"]

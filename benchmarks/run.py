@@ -13,6 +13,8 @@ CSV rows for:
                              eager) + simulator events/s at pod scale
   * bench_kernels          — Pallas kernels vs oracles
   * bench_collective_exec  — executable shard_map collectives (8 fake devices)
+  * bench_overlap          — chunked waves pipelined behind Pallas compute
+                             (measured interleaving + the α–β overlap claim)
 
 ``python -m benchmarks.run NAME`` runs just one module; an unknown NAME is
 an error listing the valid ones.  ``--json PATH`` additionally writes the
@@ -33,12 +35,12 @@ import sys
 
 def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
-                            bench_sim_scale, fig2a_fragmentation,
-                            fig4a_training, fig4b_collectives, sim_morph,
-                            sim_pod, sim_rack)
+                            bench_overlap, bench_sim_scale,
+                            fig2a_fragmentation, fig4a_training,
+                            fig4b_collectives, sim_morph, sim_pod, sim_rack)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
             sim_rack, sim_morph, sim_pod, bench_sim_scale, bench_kernels,
-            bench_collective_exec]
+            bench_collective_exec, bench_overlap]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 

@@ -34,7 +34,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.scheduler import Schedule, build_schedule
+from repro.core.scheduler import (ChunkedSchedule, Schedule, build_schedule,
+                                  chunk_schedule)
+
+__all__ = ["compile_schedule", "schedule_for_execution", "chunk_schedule",
+           "ChunkedSchedule", "overlapped_all_reduce", "all_reduce",
+           "make_all_reduce", "make_overlapped_all_reduce", "ALGOS"]
 
 Array = jax.Array
 #: encode(piece) -> payload pytree shipped over the wire
@@ -124,10 +129,21 @@ def compile_schedule(schedule: Schedule, axis_name: str,
 
 
 @functools.lru_cache(maxsize=256)
-def schedule_for_execution(algo: str, p: int) -> Schedule:
+def schedule_for_execution(algo: str, p: int,
+                           n_chunks: int = 1) -> "Schedule | ChunkedSchedule":
     """The canonical rank-space schedule for executing ``algo`` over ``p``
-    devices (participants 0..p−1; byte metadata irrelevant to execution)."""
-    return build_schedule(algo, tuple(range(p)), 0.0)
+    devices (participants 0..p−1; byte metadata irrelevant to execution).
+
+    ``n_chunks > 1`` returns the chunked (wave) lowering instead.  The LRU
+    is keyed on ``(algo, p, n_chunks)`` — keying on ``(algo, p)`` alone
+    would let a chunked variant alias the monolithic executable (or vice
+    versa) and silently hand ``compile_schedule`` the wrong program shape;
+    ``tests/test_overlap.py`` pins the non-contamination.  Cleared by
+    ``cost_model.clear_pricing_caches`` like every module-level cache.
+    """
+    if n_chunks == 1:
+        return build_schedule(algo, tuple(range(p)), 0.0)
+    return chunk_schedule(schedule_for_execution(algo, p), n_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +183,106 @@ def all_reduce(x: Array, axis_name: str, algo: str = "lumorph2") -> Array:
     except KeyError:
         raise ValueError(f"unknown collective {algo!r}; have {sorted(ALGOS)}")
     return fn(x, axis_name)
+
+
+def overlapped_all_reduce(x: Array, axis_name: str, algo: str = "lumorph2",
+                          n_chunks: int = 1,
+                          compute: Optional[Callable[[Array], Array]] = None,
+                          encode: Optional[Encode] = None,
+                          decode: Optional[Decode] = None,
+                          schedule: "Optional[Schedule | ChunkedSchedule]" = None,
+                          ) -> Array:
+    """Chunked, pipelined ALLREDUCE over ``axis_name`` (PCCL-style).
+
+    The buffer is split into ``n_chunks`` equal payload slices; each slice
+    runs the full collective program as its own reduce-scatter + all-gather
+    waves (``scheduler.chunk_schedule``), and ``compute`` — e.g. a Pallas
+    kernel consuming each reduced bucket — is issued on chunk ``k−1``
+    *after* chunk ``k``'s ppermutes, so the XLA scheduler can hide the wire
+    time behind the compute stream (on CPU the interleaving is still
+    traced, just not concurrent).  Must be called inside ``shard_map``.
+
+    Equivalence contract (``tests/test_overlap.py``): for every algorithm,
+    chunk count, and dtype the result equals ``lax.psum`` to tolerance, and
+    ``n_chunks=1`` with ``compute=None`` is **bit-identical** to the
+    monolithic :func:`all_reduce` path — the wave split and re-slicing add
+    no arithmetic.  ``encode``/``decode`` wrap every hop of every wave, so
+    the int8 payload transform composes per-chunk unchanged.
+
+    ``compute`` (when given) maps each *reduced* slice to its output slice
+    (shapes preserved); the returned array concatenates the computed
+    slices.  ``schedule`` overrides the rank-space program — pass a
+    pod-built ``hier:*`` Schedule (or a prebuilt :class:`ChunkedSchedule`)
+    whose participant count matches the axis.
+    """
+    p = compat.axis_size(axis_name)
+    if schedule is None:
+        a = algo
+        if a in ("lumorph2",) and p & (p - 1):
+            a = "ring"  # same paper-§3 dispatch as all_reduce
+        chunked = schedule_for_execution(a, p, n_chunks)
+        if not isinstance(chunked, ChunkedSchedule):
+            chunked = chunk_schedule(chunked, n_chunks)
+    else:
+        chunked = (schedule if isinstance(schedule, ChunkedSchedule)
+                   else chunk_schedule(schedule, n_chunks))
+    C = chunked.n_chunks
+    if len(chunked.participants) != p:
+        raise ValueError(
+            f"schedule has {len(chunked.participants)} participants but "
+            f"axis {axis_name!r} is {p}-wide")
+
+    shape = x.shape
+    flat, n = _flatten_pad(x, C)
+    size = flat.shape[0] // C
+    slices = [flat[c * size:(c + 1) * size] for c in range(C)]
+
+    # one compiled fn per shared wave schedule (chunks reuse the programs)
+    fns: dict[int, Callable[[Array], Array]] = {}
+    per_chunk: list[list[Callable[[Array], Array]]] = [[] for _ in range(C)]
+    for w in chunked.waves:
+        f = fns.get(id(w.schedule))
+        if f is None:
+            f = fns[id(w.schedule)] = compile_schedule(
+                w.schedule, axis_name, encode=encode, decode=decode)
+        per_chunk[w.chunk].append(f)
+
+    reduced: list[Optional[Array]] = [None] * C
+    outs: list[Optional[Array]] = [None] * C
+
+    def finish(c: int) -> None:
+        outs[c] = reduced[c] if compute is None else compute(reduced[c])
+
+    for c in range(C):
+        y = slices[c]
+        for f in per_chunk[c]:  # issue chunk c's waves (rs then ag)
+            y = f(y)
+        reduced[c] = y
+        if c > 0:
+            finish(c - 1)  # chunk c−1's compute rides behind chunk c's comm
+    finish(C - 1)
+    out = jnp.concatenate(outs) if C > 1 else outs[0]
+    return _unflatten(out, n, shape)
+
+
+def make_overlapped_all_reduce(mesh: Mesh, axis_name: str,
+                               algo: str = "lumorph2", n_chunks: int = 1,
+                               compute: Optional[Callable[[Array], Array]] = None,
+                               schedule: "Optional[Schedule | ChunkedSchedule]" = None,
+                               ) -> Callable[[Array], Array]:
+    """Jitted global-array wrapper of :func:`overlapped_all_reduce` (the
+    chunked sibling of :func:`make_all_reduce`; same sharding contract)."""
+    fn = compat.shard_map(
+        lambda v: overlapped_all_reduce(v[0], axis_name, algo,
+                                        n_chunks=n_chunks, compute=compute,
+                                        schedule=schedule)[None],
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(axis_name),
+        axis_names={axis_name},
+        check_vma=False,
+    )
+    return jax.jit(fn)
 
 
 def make_all_reduce(mesh: Mesh, axis_name: str, algo: str = "lumorph2",

@@ -200,6 +200,31 @@ def dnc_greedy_cost(n_bytes: float, p: int, link: LinkModel) -> float:
     return 2.0 * best_split(p, n_bytes)
 
 
+def pipeline_time(comm_per_chunk, compute_s: float = 0.0) -> float:
+    """Makespan of a chunked collective double-buffered against compute.
+
+    ``comm_per_chunk[c]`` is chunk ``c``'s wire time; ``compute_s`` is the
+    *total* compute to hide, split evenly across the chunks (the per-bucket
+    work a training step does as each reduced chunk lands).  Two engines:
+    the fabric serializes the chunk collectives back-to-back, while the
+    compute stream consumes chunk ``c`` as soon as both its collective and
+    chunk ``c−1``'s compute finished — so each wave after the first costs
+    ``max(comm, compute)`` and the total tends to
+    ``max(Σcomm, Σcompute) + pipeline fill`` (PCCL's overlap argument).
+    With ``compute_s == 0`` this degenerates to ``sum(comm_per_chunk)``.
+    """
+    comm = list(comm_per_chunk)
+    if not comm:
+        return compute_s
+    per_chunk_compute = compute_s / len(comm)
+    comm_end = 0.0
+    compute_end = 0.0
+    for m in comm:
+        comm_end += m
+        compute_end = max(compute_end, comm_end) + per_chunk_compute
+    return compute_end
+
+
 def mixed_radix_factorization(p: int, radix: int) -> list[int]:
     """Factor ``p`` into factors ≤ radix, preferring ``radix`` (e.g. 32 → [4,4,2])."""
     if p < 1:
@@ -257,10 +282,73 @@ def _ir_cost(algo: str, n_bytes: float, p: int, link: LinkModel) -> float:
     return build_schedule(algo, tuple(range(p)), n_bytes).cost(link)
 
 
+@functools.lru_cache(maxsize=IR_COST_CACHE_SIZE)
+def _chunked_wave_costs(algo: str, n_bytes: float, p: int, link: LinkModel,
+                        n_chunks: int) -> tuple[float, ...]:
+    """Per-chunk wire time of ``algo`` chunked ``n_chunks`` ways (each entry
+    one chunk's reduce-scatter + all-gather waves, priced in serial program
+    order so MZI-window continuity across chunk boundaries is kept)."""
+    from repro.core.scheduler import build_schedule, chunk_schedule
+    chunked = chunk_schedule(build_schedule(algo, tuple(range(p)), n_bytes),
+                             n_chunks)
+    return tuple(chunked.chunk_costs(link))
+
+
+def chunked_wave_costs(algo: str, n_bytes: float, p: int, link: LinkModel,
+                       n_chunks: int) -> tuple[float, ...]:
+    """Public accessor for the per-chunk wire times (one entry per chunk,
+    rs + ag waves summed) — what :func:`pipeline_time` consumes when a
+    caller pipelines several collectives (e.g. a DDP bucket stream) into
+    one schedule."""
+    if algo == "lumorph2" and p & (p - 1):
+        algo = "ring"  # keep the cache key canonical (same §3 fallback)
+    if algo not in IR_PRICED:
+        raise ValueError(f"no chunked lowering for {algo!r}; have {IR_PRICED}")
+    if p <= 1:
+        return (0.0,) * n_chunks
+    return _chunked_wave_costs(algo, float(n_bytes), p, link, n_chunks)
+
+
+def chunked_algorithm_cost(algo: str, n_bytes: float, p: int,
+                           link: LinkModel, n_chunks: int) -> float:
+    """Price one ALLREDUCE lowered as ``n_chunks`` chunked waves, executed
+    serially (no overlap): the chunking *overhead* — extra α rounds — shows
+    up here, the overlap *win* in :func:`overlapped_step_time`."""
+    if algo == "lumorph2" and p & (p - 1):
+        algo = "ring"  # keep the cache key canonical (same §3 fallback)
+    if algo not in IR_PRICED:
+        raise ValueError(f"no chunked lowering for {algo!r}; have {IR_PRICED}")
+    if p <= 1:
+        return 0.0
+    if n_chunks == 1:
+        # bit-identical to the monolithic price: one chunk's grouped wave
+        # sums would reassociate the float adds by an ulp
+        return algorithm_cost(algo, n_bytes, p, link)
+    return sum(_chunked_wave_costs(algo, float(n_bytes), p, link, n_chunks))
+
+
+def overlapped_step_time(algo: str, n_bytes: float, p: int, link: LinkModel,
+                         n_chunks: int, compute_s: float) -> float:
+    """Makespan of ``compute_s`` seconds of compute double-buffered against
+    a chunked ALLREDUCE (see :func:`pipeline_time`).  ``n_chunks == 1``
+    prices the unoverlapped baseline: compute + the monolithic collective."""
+    if algo == "lumorph2" and p & (p - 1):
+        algo = "ring"
+    if p <= 1:
+        return compute_s
+    if n_chunks == 1:
+        return compute_s + algorithm_cost(algo, n_bytes, p, link)
+    return pipeline_time(_chunked_wave_costs(algo, float(n_bytes), p, link,
+                                             n_chunks), compute_s)
+
+
 def clear_pricing_caches() -> None:
     """Drop every module-level pricing cache: the ``algorithm_cost`` /
-    ``Schedule.cost`` LRU here and the compiled-schedule cache in
-    ``repro.core.collectives`` (when that module was imported — it pulls
+    ``Schedule.cost`` LRU here, the chunked wave-cost LRU
+    (:func:`chunked_algorithm_cost` / :func:`overlapped_step_time`), and
+    the compiled-schedule cache in ``repro.core.collectives`` — which since
+    the overlap PR also holds the *chunked* executable schedules, keyed
+    ``(algo, p, n_chunks)`` — (when that module was imported — it pulls
     in jax, which this module never does).  Per-simulator caches
     (``repro.core.pricing.SchedulePricer``) die with their owner; this
     helper is for long-lived processes — CI sweeps, notebooks — and is
@@ -269,6 +357,7 @@ def clear_pricing_caches() -> None:
     import sys
 
     _ir_cost.cache_clear()
+    _chunked_wave_costs.cache_clear()
     collectives = sys.modules.get("repro.core.collectives")
     if collectives is not None:
         collectives.schedule_for_execution.cache_clear()

@@ -38,7 +38,7 @@ from typing import Optional, Sequence
 from repro.core import cost_model as cm
 from repro.core.fabric import CircuitError, LumorphRack
 from repro.core.rack import Pod, group_by_rack
-from repro.core.scheduler import build_any_schedule
+from repro.core.scheduler import build_any_schedule, chunk_schedule
 
 
 def canonical_layout(chips: Sequence[int], tiles_per_server: int,
@@ -186,6 +186,55 @@ class SchedulePricer:
         except CircuitError:
             return float("inf")  # e.g. egress fanout > TRX banks
         return sched.cost(self.link, rack=self.rack)
+
+    def chunk_costs(self, algo: str, chips: Sequence[int], n_bytes: float,
+                    n_chunks: int) -> tuple[float, ...]:
+        """Per-chunk wire time of ``algo`` chunked ``n_chunks`` ways on this
+        concrete layout (rack-priced like :meth:`price`; ``inf`` per chunk
+        when the program is inadmissible).  Shape-only — chunking never
+        materializes Transfer tables — and cached on the canonical layout
+        under a ``("chunks", …)`` key next to the monolithic prices."""
+        key = ("chunks", algo, self.cache_key_chips(chips), n_bytes, n_chunks)
+        cached = self._cache.get(key)
+        if cached is not None:
+            self._cache.move_to_end(key)
+            self.stats.hits += 1
+            return cached
+        self.stats.misses += 1
+        self.stats.built += 1
+        try:
+            sched = build_any_schedule(algo, key[2], n_bytes,
+                                       chips_per_rack=self.chips_per_rack)
+        except ValueError:
+            if not algo.startswith("hier:"):
+                raise
+            sched = None
+        if sched is None:
+            costs: tuple[float, ...] = (float("inf"),) * n_chunks
+        else:
+            chunked = chunk_schedule(sched, n_chunks)
+            if self.rack is not None:
+                try:
+                    chunked.validate(self.rack, check_fibers=False)
+                except CircuitError:
+                    chunked = None
+            costs = ((float("inf"),) * n_chunks if chunked is None else
+                     tuple(chunked.chunk_costs(self.link, self.rack)))
+        self._cache[key] = costs
+        if len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return costs
+
+    def price_overlapped(self, algo: str, chips: Sequence[int],
+                         n_bytes: float, n_chunks: int,
+                         compute_s: float = 0.0) -> float:
+        """Pipelined step makespan on this layout: the chunked collective
+        double-buffered against ``compute_s`` of compute
+        (``cost_model.pipeline_time`` over :meth:`chunk_costs`)."""
+        if len(tuple(chips)) <= 1:
+            return compute_s
+        return cm.pipeline_time(
+            self.chunk_costs(algo, chips, n_bytes, n_chunks), compute_s)
 
     # -- bounds + pruning ---------------------------------------------------
     def lower_bound(self, algo: str, chips: Sequence[int],

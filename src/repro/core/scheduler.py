@@ -39,7 +39,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import LinkModel, mixed_radix_factorization
+from repro.core.cost_model import (LinkModel, mixed_radix_factorization,
+                                   pipeline_time)
 from repro.core.fabric import LumorphRack, peak_pair_multiplicity
 from repro.core.rack import Pod, group_by_rack
 
@@ -634,6 +635,156 @@ def transfer_schedule(move_rounds: Sequence[Sequence[tuple[int, int]]],
     return Schedule(tag, tuple(chips), tuple(rounds),
                     n_bytes=bytes_per_move, n_chunks=1,
                     _fill=fill if rounds else None)
+
+
+# ---------------------------------------------------------------------------
+# chunked / pipelined lowering (PCCL-style overlap)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Wave:
+    """One overlappable unit of a :class:`ChunkedSchedule`.
+
+    A wave is a dependency-closed run of same-phase rounds operating on one
+    ``1/C`` slice of the payload: chunk ``chunk``'s reduce-scatter prefix
+    (``phase == "rs"``) or its all-gather suffix (``phase == "ag"``).  The
+    wave's ``schedule`` is an ordinary :class:`Schedule` over the slice —
+    ``compile_schedule`` lowers it, :meth:`Schedule.validate` checks it
+    against a fabric — and is shared between chunks (every chunk runs the
+    same program on its own slice).  Dependencies: a chunk's ``ag`` wave
+    needs its ``rs`` wave; waves of different chunks are independent, which
+    is exactly what lets wave ``k``'s ppermutes hide behind chunk
+    ``k−1``'s compute.
+    """
+
+    chunk: int
+    phase: str  # "rs" (reduce-scatter, accumulate) | "ag" (all-gather)
+    schedule: Schedule
+
+
+class ChunkedSchedule:
+    """A :class:`Schedule` lowered onto ``n_chunks`` payload slices.
+
+    The base program's rounds are split at the reduce-scatter/all-gather
+    phase boundary (the shape-level ``Round.reduce`` tags) and re-emitted
+    once per payload chunk at ``n_bytes / C`` — ``2·C`` waves (``C`` when a
+    phase is empty, e.g. ``transfer_schedule``'s pure-overwrite programs)
+    whose serial concatenation is provably equivalent to the base program
+    (``tests/test_overlap.py``).  Pricing walks that serial concatenation
+    with the ordinary :meth:`Schedule._priced_rounds` machinery, so MZI
+    windows are only charged where a chunk boundary actually changes the
+    circuit set (ring's never does; LUMORPH-2's boundary reuses the
+    distance-``p/2`` circuits of the previous chunk's last round), and no
+    Transfer tables are materialized.  Execution (``repro.core.collectives
+    .overlapped_all_reduce``) compiles the shared per-phase wave schedules
+    once and double-buffers chunks against a compute stream.
+    """
+
+    def __init__(self, base: Schedule, n_chunks: int):
+        if n_chunks < 1:
+            raise ValueError(f"n_chunks must be ≥ 1, got {n_chunks}")
+        self.base = base
+        self.n_chunks = n_chunks
+        rs_rounds, ag_rounds = _split_phases(base)
+
+        def scaled(rounds, fill_rounds):
+            scale = 1.0 / n_chunks
+            new = tuple(Round(r.pairs_arr, r.bytes_per_circuit * scale,
+                              egress_fanout=r.egress_fanout, tier=r.tier,
+                              reduce=r.reduce) for r in rounds)
+
+            def fill():
+                # the chunk tables of a 1/C slice ARE the base tables: the
+                # slice is a full buffer of n/C bytes with the same chunk
+                # granularity, so materialize the base once and share
+                base.materialize()
+                return tuple(r.transfers for r in fill_rounds)
+
+            return Schedule(base.algo, base.participants, new,
+                            base.n_bytes / n_chunks, n_chunks=base.n_chunks,
+                            _fill=fill if new else None)
+
+        self._rs = scaled(rs_rounds, rs_rounds) if rs_rounds else None
+        self._ag = scaled(ag_rounds, ag_rounds) if ag_rounds else None
+        waves: list[Wave] = []
+        for c in range(n_chunks):
+            if self._rs is not None:
+                waves.append(Wave(c, "rs", self._rs))
+            if self._ag is not None:
+                waves.append(Wave(c, "ag", self._ag))
+        self.waves: tuple[Wave, ...] = tuple(waves)
+        #: the serial program: every chunk's waves back to back, priced as
+        #: one ordinary Schedule (rounds are shared objects, so pricing's
+        #: geometry reuse sees through the repetition)
+        serial_rounds = tuple(r for w in self.waves for r in w.schedule.rounds)
+        self._serial = Schedule(f"{base.algo}|chunks={n_chunks}",
+                                base.participants, serial_rounds,
+                                base.n_bytes, n_chunks=base.n_chunks)
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def algo(self) -> str:
+        return self._serial.algo
+
+    @property
+    def participants(self) -> tuple[int, ...]:
+        return self.base.participants
+
+    def waves_of_chunk(self, chunk: int) -> tuple[Wave, ...]:
+        return tuple(w for w in self.waves if w.chunk == chunk)
+
+    # -- pricing -------------------------------------------------------------
+    def wave_costs(self, link: LinkModel,
+                   rack: "Optional[LumorphRack | Pod]" = None) -> list[float]:
+        """Per-wave α–β time, attributed by walking the *serial* program —
+        so ``sum(wave_costs()) == cost()`` exactly, and a wave whose first
+        round reuses the previous wave's circuits pays no MZI window."""
+        priced = iter(self._serial._priced_rounds(link, rack))
+        out = []
+        for w in self.waves:
+            out.append(sum(next(priced)[1] for _ in w.schedule.rounds))
+        return out
+
+    def chunk_costs(self, link: LinkModel,
+                    rack: "Optional[LumorphRack | Pod]" = None) -> list[float]:
+        """Per-chunk wire time (each chunk's rs + ag waves summed)."""
+        per_chunk = [0.0] * self.n_chunks
+        for w, s in zip(self.waves, self.wave_costs(link, rack)):
+            per_chunk[w.chunk] += s
+        return per_chunk
+
+    def cost(self, link: LinkModel,
+             rack: "Optional[LumorphRack | Pod]" = None) -> float:
+        """Serial (overlap-disabled) α–β time of the chunked program.  With
+        ``n_chunks == 1`` this equals the base schedule's cost bit-for-bit;
+        more chunks add α/MZI rounds but never β bytes."""
+        return self._serial.cost(link, rack)
+
+    def overlapped_cost(self, link: LinkModel,
+                        rack: "Optional[LumorphRack | Pod]" = None,
+                        compute_s: float = 0.0) -> float:
+        """Pipelined makespan: chunk collectives serialized on the fabric,
+        ``compute_s`` of compute split across chunks and double-buffered
+        (``cost_model.pipeline_time``) — the price the overlap claim is
+        gated on."""
+        return pipeline_time(self.chunk_costs(link, rack), compute_s)
+
+    # -- validation ----------------------------------------------------------
+    def validate(self, rack: "LumorphRack | Pod",
+                 check_fibers: bool = True) -> None:
+        """Every wave must satisfy the fabric's photonic limits (waves run
+        one at a time on the wire, so per-wave feasibility is the right
+        granularity — identical to the base program's rounds)."""
+        for w in (self._rs, self._ag):
+            if w is not None:
+                w.validate(rack, check_fibers=check_fibers)
+
+
+def chunk_schedule(schedule: Schedule, n_chunks: int) -> ChunkedSchedule:
+    """Lower ``schedule`` into ``n_chunks`` overlappable waves (see
+    :class:`ChunkedSchedule`).  Shape-only: no Transfer tables are built —
+    planning and pricing a chunked program stays as lazy as the base IR."""
+    return ChunkedSchedule(schedule, n_chunks)
 
 
 # ---------------------------------------------------------------------------

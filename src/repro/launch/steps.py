@@ -82,12 +82,20 @@ def make_train_step(cfg: ModelConfig, policy: ShardingPolicy,
                     compress: bool = False,
                     donate: bool = True,
                     wire_dtype=None,
-                    microbatches: int = 1):
+                    microbatches: int = 1,
+                    overlap_chunks: int = 1):
     """Build the jitted train step (decode which comm backend to use).
 
     ``microbatches > 1``: gradient accumulation — the global batch is split
     along its leading dim and scanned, cutting peak activation memory
     ~microbatches× for the cost of re-reading weights per chunk.
+
+    ``overlap_chunks > 1`` (LUMORPH backends only): the ``--overlap`` step
+    mode — every gradient bucket's collective is lowered as that many
+    chunked waves (``grad_comm.all_reduce_grads(overlap_chunks=…)``) so the
+    scheduler can pipeline the ppermute rounds against compute instead of
+    executing one blocking monolith.  Ignored by ``comm="xla"`` (GSPMD owns
+    those collectives).
     """
     opt_cfg = opt_cfg or AdamWConfig()
     mesh = policy.mesh
@@ -150,7 +158,8 @@ def make_train_step(cfg: ModelConfig, policy: ShardingPolicy,
         kw = {} if wire_dtype is None else {"wire_dtype": wire_dtype}
         grads, new_ef, _ = grad_comm.all_reduce_grads(
             grads, dp_axes, algo=comm, bucket_bytes=bucket_bytes,
-            compress=compress, error_feedback=ef, mean=True, **kw)
+            compress=compress, error_feedback=ef, mean=True,
+            overlap_chunks=overlap_chunks, **kw)
         loss = jax.lax.pmean(loss, dp_axes)
         core_opt = {k: v for k, v in opt_state.items() if k != "ef"}
         params, core_opt = adamw_update(params, grads, core_opt, opt_cfg)

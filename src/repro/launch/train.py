@@ -40,6 +40,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--comm", default="xla",
                     choices=["xla", "ring", "lumorph2", "lumorph4", "auto"])
     ap.add_argument("--compress", action="store_true", help="int8 grad collectives")
+    ap.add_argument("--overlap", type=int, default=1, metavar="CHUNKS",
+                    help="chunked/pipelined grad collectives: split every "
+                         "bucket into CHUNKS waves overlapped with compute "
+                         "(LUMORPH backends only; 1 = monolithic)")
     ap.add_argument("--bucket-mb", type=int, default=25)
     ap.add_argument("--wire-dtype", default="bfloat16",
                     choices=["bfloat16", "float32"],
@@ -63,10 +67,13 @@ def main(argv=None) -> dict:
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
                           warmup_steps=max(1, args.steps // 20))
     import jax.numpy as jnp
+    if args.overlap > 1 and args.comm == "xla":
+        raise SystemExit("--overlap needs a LUMORPH comm backend "
+                         "(ring/lumorph2/lumorph4/auto), not xla")
     train_step = steps_lib.make_train_step(
         cfg, policy, opt_cfg, comm=args.comm,
         bucket_bytes=args.bucket_mb * 1024 * 1024, compress=args.compress,
-        wire_dtype=jnp.dtype(args.wire_dtype))
+        wire_dtype=jnp.dtype(args.wire_dtype), overlap_chunks=args.overlap)
 
     rng = jax.random.PRNGKey(args.seed)
     params, opt_state = steps_lib.init_sharded_state(
@@ -94,7 +101,8 @@ def main(argv=None) -> dict:
             ckpt_lib.save(args.ckpt_dir, step + 1, (params, opt_state))
     result = {"final_loss": losses[-1] if losses else None,
               "first_loss": losses[0] if losses else None,
-              "steps": len(losses), "comm": args.comm}
+              "steps": len(losses), "comm": args.comm,
+              "overlap": args.overlap}
     print(json.dumps(result))
     return result
 

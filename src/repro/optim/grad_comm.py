@@ -102,7 +102,8 @@ def _int8_decode(payload: tuple[Array, Array], like: Array) -> Array:
     return dequantize_int8(q, sc, like.size).reshape(like.shape)
 
 
-def compressed_all_reduce(x: Array, axis_name: str) -> Array:
+def compressed_all_reduce(x: Array, axis_name: str,
+                          n_chunks: int = 1) -> Array:
     """LUMORPH-2 recursive halving/doubling with int8 payloads.
 
     The *same* Schedule IR as the uncompressed collective, compiled with
@@ -110,12 +111,22 @@ def compressed_all_reduce(x: Array, axis_name: str) -> Array:
     are quantized (per-block scales ride along as fp32), the receiver
     dequant-accumulates in fp32.  Wire bytes ≈ n (int8) + n/64 (scales)
     vs 4n fp32: ~3.8× β reduction.
+
+    ``n_chunks > 1`` runs the chunked/pipelined lowering instead
+    (:func:`repro.core.collectives.overlapped_all_reduce`): the int8
+    transform composes per-chunk — every wave's hops quantize their own
+    1/C slice with the same per-block scales machinery, so compression and
+    overlap stack rather than exclude each other.
     """
     p = compat.axis_size(axis_name)
     if p == 1:
         return x
     if p & (p - 1):
         raise ValueError("compressed allreduce requires a power-of-two axis")
+    if n_chunks > 1:
+        return collectives.overlapped_all_reduce(
+            x.astype(jnp.float32), axis_name, "lumorph2", n_chunks=n_chunks,
+            encode=_int8_encode, decode=_int8_decode).astype(x.dtype)
     fn = collectives.compile_schedule(
         collectives.schedule_for_execution("lumorph2", p), axis_name,
         encode=_int8_encode, decode=_int8_decode)
@@ -133,9 +144,18 @@ def all_reduce_grads(grads: PyTree, axis_names: tuple[str, ...],
                      compress: bool = False,
                      error_feedback: Optional[PyTree] = None,
                      mean: bool = True,
-                     wire_dtype=jnp.bfloat16) -> tuple[PyTree, Optional[PyTree], list[tuple[int, str]]]:
+                     wire_dtype=jnp.bfloat16,
+                     overlap_chunks: int = 1) -> tuple[PyTree, Optional[PyTree], list[tuple[int, str]]]:
     """ALLREDUCE ``grads`` over the (manual) data axes with LUMORPH
     collectives, bucket by bucket.
+
+    ``overlap_chunks > 1`` lowers every bucket through the chunked wave
+    pipeline (``overlapped_all_reduce``): each bucket's payload is split
+    into that many slices whose collectives the XLA scheduler can overlap
+    with neighbouring compute — the PCCL-style execution mode behind
+    ``--overlap`` in ``repro.launch.train``.  Numerics are unchanged
+    (differentially tested in ``tests/test_overlap.py``); ``1`` keeps the
+    bit-exact monolithic path.
 
     Returns (reduced_grads, new_error_feedback, bucket_log) where
     bucket_log records (bytes, algo) per bucket for EXPERIMENTS.md.
@@ -179,9 +199,13 @@ def all_reduce_grads(grads: PyTree, axis_names: tuple[str, ...],
         chosen = algo
         if algo == "auto":
             chosen = select_algorithm(n_bytes, p_total, link)
-        log.append((n_bytes, chosen + ("+int8" if compress else "")))
+        log.append((n_bytes, chosen + ("+int8" if compress else "")
+                    + (f"+ovl{overlap_chunks}" if overlap_chunks > 1 else "")))
         if compress:
-            piece = compressed_all_reduce(piece, axis)
+            piece = compressed_all_reduce(piece, axis, n_chunks=overlap_chunks)
+        elif overlap_chunks > 1:
+            piece = collectives.overlapped_all_reduce(
+                piece, axis, chosen, n_chunks=overlap_chunks)
         else:
             piece = collectives.all_reduce(piece, axis, chosen)
         reduced_parts.append(piece)

@@ -218,9 +218,40 @@ def test_canonical_cache_shares_isomorphic_entries():
 
 def test_clear_pricing_caches_smoke():
     cm.algorithm_cost("ring", 1e6, 8, cm.LUMORPH_LINK)
+    cm.chunked_algorithm_cost("ring", 1e6, 8, cm.LUMORPH_LINK, 4)
     assert cm._ir_cost.cache_info().currsize > 0
+    assert cm._chunked_wave_costs.cache_info().currsize > 0
     cm.clear_pricing_caches()
     assert cm._ir_cost.cache_info().currsize == 0
+    assert cm._chunked_wave_costs.cache_info().currsize == 0
+
+
+def test_chunked_pricing_stays_lazy_and_cached():
+    """Chunked planning is planning: ``SchedulePricer.chunk_costs`` /
+    ``price_overlapped`` and the module-level chunked cost entry points
+    must build zero Transfer tables, and repeat queries (isomorphic
+    layouts included) must come from the pricer's LRU."""
+    cpr = 32
+    pod = _pod(2, cpr)
+    pricer = SchedulePricer(cm.LUMORPH_LINK, rack=pod, chips_per_rack=cpr)
+    chips = _spanning_chips(8, 2, cpr)
+    before = transfer_tables_built()
+    costs = pricer.chunk_costs("hier:lumorph2", chips, 1e7, 4)
+    assert len(costs) == 4 and all(c > 0 for c in costs)
+    pricer.price_overlapped("lumorph4", chips, 1e7, 4, compute_s=1e-4)
+    cm.chunked_algorithm_cost("lumorph2", 1e7, 16, cm.LUMORPH_LINK, 4)
+    cm.overlapped_step_time("lumorph2", 1e7, 16, cm.LUMORPH_LINK, 4, 1e-4)
+    assert transfer_tables_built() == before, \
+        "chunked pricing materialized Transfer tables"
+    # isomorphic layout (racks renamed): served from the canonical LRU
+    misses = pricer.stats.misses
+    shifted = tuple(c + 2 * cpr for c in chips)
+    assert pricer.chunk_costs("hier:lumorph2", shifted, 1e7, 4) == costs
+    assert pricer.stats.misses == misses
+    # chunked keys must not collide with the monolithic price of the
+    # same (algo, layout, bytes)
+    mono = pricer.price("hier:lumorph2", chips, 1e7)
+    assert sum(costs) >= mono * (1 - 1e-12)  # chunking only ever adds α
 
 
 # ---------------------------------------------------------------------------
