@@ -1,0 +1,145 @@
+"""Parallel scenario sweep: the multi-tenant claims at ensemble scale.
+
+Where ``sim_rack``/``sim_morph``/``sim_pod`` pin semantics on a handful
+of hand-picked traces, this benchmark drives :mod:`repro.sweep` across a
+grid of seeds × disciplines × rack/pod fabrics × workload mixes ×
+morph policies — the full configuration runs 1000+ scenarios — with
+every ``zoo`` tenant priced by its model's derived
+:class:`~repro.sim.workload.CollectiveProfile` and the ``zoo-generic``
+control arm replaying the *same traces* with profiles stripped.
+
+Measurements:
+
+  * **sweep throughput** — scenarios/minute and simulator events/second
+    across the worker pool (the full grid runs parallel; a deterministic
+    subset re-runs serial for the speedup ratio).
+  * **Pareto report** — per-policy acceptance/goodput/JCT/fragmentation
+    aggregates and rankings, split by workload class (lands in
+    ``BENCH_sweep.json`` via ``--json``).
+
+Claims (PASS/FAIL rows, gated in CI):
+
+  * ``claim_sweep_throughput``  — scenarios/minute and events/second
+    stay above conservative floors; with ≥ 4 CPU cores (the CI runner
+    shape) the 4-worker sweep additionally shows ≥ 3× the serial rate.
+  * ``claim_profiles_matter``   — heterogeneous collective profiles
+    change the policy Pareto ranking (rankings or front differ between
+    the ``profiled`` and ``generic`` workload classes).
+  * ``claim_sweep_deterministic`` — per-scenario summaries from the
+    parallel run are bit-identical to the serial re-run of the subset.
+
+Set ``BENCH_SWEEP_QUICK=1`` for the ~32-scenario configuration the fast
+CI job runs (floors relaxed — process spawn dominates at that scale).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.sweep import default_profiles, pareto_report, run_sweep, sweep_grid
+
+#: every-Nth-scenario serial re-run: speedup denominator + determinism
+SUBSET_STRIDE_FULL = 5
+SUBSET_STRIDE_QUICK = 3
+
+#: conservative rate floors (well below observed dev-box rates so only a
+#: real regression trips them); quick mode pays spawn overhead on a
+#: too-small grid, hence the lower bar
+FLOOR_SCEN_PER_MIN = {True: 20.0, False: 150.0}
+FLOOR_EVENTS_PER_S = {True: 500.0, False: 5000.0}
+SPEEDUP_GATE = 3.0
+SPEEDUP_MIN_CORES = 4
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_SWEEP_QUICK"))
+
+
+def _grid(seed: int, quick: bool):
+    """12 scenarios per seed: {lumorph, lumorph+morph, torus, sipac} on a
+    single 64-chip rack plus {lumorph, lumorph+morph} on a 2×64 pod,
+    each under the profiled and the generic workload arm."""
+    n_seeds = 3 if quick else 84  # 36 / 1008 scenarios
+    return sweep_grid(seeds=range(seed, seed + n_seeds),
+                      disciplines=("lumorph", "torus", "sipac"),
+                      fabrics=((64, 1), (128, 2)),
+                      workloads=("zoo", "zoo-generic"),
+                      morphs=(False, True),
+                      n_jobs=30 if quick else 120,
+                      failure_rate=0.02)
+
+
+def run(seed: int = 0, jobs: int = 0) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    quick = _quick()
+    grid = _grid(seed, quick)
+    profiles = default_profiles()
+    cores = os.cpu_count() or 1
+    if not jobs:
+        jobs = max(1, min(4, cores))
+
+    t0 = time.perf_counter()
+    results = run_sweep(grid, jobs=jobs, profiles=profiles)
+    par_wall = time.perf_counter() - t0
+    par_rate = len(grid) / par_wall * 60.0
+    events = sum(r["summary"]["events"] for r in results)
+    ev_rate = events / par_wall
+
+    stride = SUBSET_STRIDE_QUICK if quick else SUBSET_STRIDE_FULL
+    subset = grid[::stride]
+    t0 = time.perf_counter()
+    serial = run_sweep(subset, jobs=1, profiles=profiles)
+    ser_wall = time.perf_counter() - t0
+    ser_rate = len(subset) / ser_wall * 60.0
+    speedup = par_rate / ser_rate if ser_rate else float("inf")
+
+    by_scenario = {tuple(sorted(r["scenario"].items())): r["summary"]
+                   for r in results}
+    deterministic = all(
+        by_scenario[tuple(sorted(r["scenario"].items()))] == r["summary"]
+        for r in serial)
+
+    report = pareto_report(results)
+    classes = report["classes"]
+    profiled = classes.get("profiled", {})
+    generic = classes.get("generic", {})
+    profiles_matter = (
+        profiled.get("rankings") != generic.get("rankings")
+        or profiled.get("pareto_front") != generic.get("pareto_front"))
+
+    per_scenario_us = par_wall / len(grid) * 1e6
+    lines.append(f"sweep/scenarios,{per_scenario_us:.1f},{len(grid)}")
+    lines.append(f"sweep/workers,,{jobs}")
+    lines.append(f"sweep/scenarios_per_min,,{par_rate:.1f}")
+    lines.append(f"sweep/events_per_s,,{ev_rate:.0f}")
+    lines.append(f"sweep/serial_scenarios_per_min,,{ser_rate:.1f}")
+    lines.append(f"sweep/parallel_speedup,,{speedup:.2f}")
+    lines.append(f"sweep/profiles,,{len(profiles)}")
+    for wc in sorted(classes):
+        cls = classes[wc]
+        for pol in sorted(cls["policies"]):
+            agg = cls["policies"][pol]
+            for key in ("acceptance_rate", "goodput_chip_seconds",
+                        "mean_jct_s", "fragmentation_rejects"):
+                lines.append(f"sweep/{wc}/{pol}/{key},,{agg[key]}")
+        front = "|".join(cls["pareto_front"])
+        lines.append(f"sweep/{wc}/pareto_front,,{front}")
+
+    floors_ok = (par_rate >= FLOOR_SCEN_PER_MIN[quick]
+                 and ev_rate >= FLOOR_EVENTS_PER_S[quick])
+    speedup_ok = (speedup >= SPEEDUP_GATE
+                  if cores >= SPEEDUP_MIN_CORES and jobs >= 4 and not quick
+                  else True)  # spawn overhead dominates below that shape
+    lines.append(f"sweep/claim_sweep_throughput,,"
+                 f"{'PASS' if floors_ok and speedup_ok else 'FAIL'}")
+    lines.append(f"sweep/claim_profiles_matter,,"
+                 f"{'PASS' if profiles_matter else 'FAIL'}")
+    lines.append(f"sweep/claim_sweep_deterministic,,"
+                 f"{'PASS' if deterministic else 'FAIL'}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

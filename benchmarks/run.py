@@ -35,13 +35,39 @@ import sys
 
 def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
-                            bench_overlap, bench_sim_scale,
+                            bench_overlap, bench_sim_scale, bench_sweep,
                             fig2a_fragmentation, fig4a_training,
                             fig4b_collectives, sim_morph, sim_pod, sim_rack)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, sim_morph, sim_pod, bench_sim_scale, bench_kernels,
-            bench_collective_exec, bench_overlap]
+            sim_rack, sim_morph, sim_pod, bench_sim_scale, bench_sweep,
+            bench_kernels, bench_collective_exec, bench_overlap]
     return {m.__name__.split(".")[-1]: m for m in mods}
+
+
+def _check_json_target(path: str, selected: list[str]) -> None:
+    """Refuse to clobber a results file that came from *other* benchmarks:
+    ``--json`` replaces the whole payload, so overwriting, say,
+    ``BENCH_sim_scale.json`` with a sweep run would silently erase the
+    sim_scale trajectory.  Re-running the same benchmark(s) over their
+    own file stays allowed; an unreadable/foreign file is also an error."""
+    import os
+    if not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        existing = {b["benchmark"] for b in payload["benchmarks"]}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"error: --json target {path} exists but is not a benchmark "
+              f"results file ({e}); refusing to overwrite", file=sys.stderr)
+        raise SystemExit(2)
+    foreign = sorted(existing - set(selected))
+    if foreign:
+        print(f"error: --json target {path} holds results for {foreign}, "
+              f"which this run (benchmarks: {sorted(selected)}) would "
+              "silently drop; write to a different path or re-run those "
+              "benchmarks too", file=sys.stderr)
+        raise SystemExit(2)
 
 
 def _parse_row(line: str) -> dict:
@@ -68,6 +94,9 @@ def main(argv=None) -> None:
                         help="also write machine-readable results to PATH")
     parser.add_argument("--seed", type=int, default=None,
                         help="re-seed benchmarks whose run() accepts a seed")
+    parser.add_argument("--jobs", type=int, default=None,
+                        help="worker processes for benchmarks whose run() "
+                             "accepts jobs (the sweep-capable ones)")
     parser.add_argument("--profile", metavar="PATH", default=None,
                         help="wrap the selected benchmarks in cProfile and "
                              "dump sorted-cumtime stats to PATH")
@@ -81,6 +110,9 @@ def main(argv=None) -> None:
         raise SystemExit(2)
     selected = args.benchmarks or list(modules)
 
+    if args.json:
+        _check_json_target(args.json, selected)
+
     profiler = None
     if args.profile:
         import cProfile
@@ -92,9 +124,11 @@ def main(argv=None) -> None:
         if name not in selected:
             continue
         kwargs = {}
-        if (args.seed is not None
-                and "seed" in inspect.signature(m.run).parameters):
+        params = inspect.signature(m.run).parameters
+        if args.seed is not None and "seed" in params:
             kwargs["seed"] = args.seed
+        if args.jobs is not None and "jobs" in params:
+            kwargs["jobs"] = args.jobs
         if profiler is not None:
             lines = profiler.runcall(m.run, **kwargs)
         else:

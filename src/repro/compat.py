@@ -58,6 +58,21 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                check_rep=check_vma, auto=auto)
 
 
+def supports_partial_auto_shard_map() -> bool:
+    """Whether shard_map manual over a *subset* of mesh axes works with a
+    non-trivial auto remainder.
+
+    On the 0.4.x line, lowering a partial-auto shard_map whose auto
+    (model) axis has size > 1 emits a ``PartitionId`` instruction the
+    SPMD partitioner rejects (``UNIMPLEMENTED: PartitionId instruction
+    is not supported for SPMD partitioning``).  ``jax.shard_map`` being
+    a top-level symbol marks the ≥ 0.5 line where that lowering was
+    reworked — the same probe :func:`shard_map` dispatches on.  Callers
+    (e.g. the dp < devices training path) should pick dp = device count
+    or skip on old jax."""
+    return hasattr(jax, "shard_map")
+
+
 def abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     """``AbstractMesh`` across the 0.4/0.5 constructor change (new jax takes
     ``(shapes, names)``; 0.4.x takes one ``((name, size), ...)`` tuple)."""

@@ -298,3 +298,38 @@ class SchedulePricer:
     def clear(self) -> None:
         """Drop the cache (counters keep accumulating)."""
         self._cache.clear()
+
+    # -- warm-start ---------------------------------------------------------
+    def export_entries(self, limit: Optional[int] = None) -> list[tuple]:
+        """The cache's ``(key, cost)`` pairs, most-recently-used first.
+
+        Keys are canonical — ``(algo, canonical layout, n_bytes)`` or the
+        ``("chunks", …)`` variant — so entries are valid in any pricer
+        built over the same link/rack geometry.  The sweep engine ships
+        these across process boundaries to warm sibling workers
+        (:mod:`repro.sweep`); they are plain tuples of str/int/float, so
+        they pickle cheaply."""
+        items = list(self._cache.items())
+        items.reverse()  # OrderedDict iterates LRU→MRU; exports want MRU first
+        if limit is not None:
+            items = items[:limit]
+        return items
+
+    def seed_entries(self, entries: Sequence[tuple]) -> int:
+        """Pre-populate the cache from :meth:`export_entries` output.
+
+        Insert-if-absent (a live entry is never clobbered), counters are
+        untouched — a seeded hit still counts as a hit, keeping stats
+        comparable between cold and warm runs.  Returns how many entries
+        were installed.  Seeding never changes *prices*: a seeded entry
+        holds exactly what this pricer would compute for its key, so
+        warm-started sweeps stay bit-identical to cold ones."""
+        installed = 0
+        for key, cost in entries:
+            if key in self._cache:
+                continue
+            self._cache[key] = cost
+            installed += 1
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        return installed

@@ -22,6 +22,7 @@ checkpoint resharding.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional
 
 import jax
@@ -293,6 +294,149 @@ def _path_str(path) -> str:
 def _map_with_path(tree: PyTree, fn) -> PyTree:
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: fn(_path_str(path), tuple(leaf.shape)), tree)
+
+
+# ---------------------------------------------------------------------------
+# Collective profiles (simulator workloads)
+# ---------------------------------------------------------------------------
+
+#: Deployment heuristic for a tenant's TP degree: v5e-class HBM budget a
+#: rank's parameter shard must fit (mirrors ``make_policy``'s ZeRO-3 rule)
+#: and the largest on-server TP the rack's 8-tile servers support.
+PROFILE_HBM_BYTES = 16e9
+PROFILE_MAX_TP = 8
+#: DDP-style gradient bucket target (≈ the 25 MB torch default, rounded to
+#: a power of two) and a cap so rack-scale models keep pricing cheap.
+PROFILE_BUCKET_BYTES = 32 << 20
+PROFILE_MAX_BUCKETS = 8
+#: Reference tokens per step for the TP activation stream and reference DP
+#: width for the per-bucket algorithm hints.
+PROFILE_TOKENS_PER_STEP = 4096
+PROFILE_REF_DP = 8
+
+
+def _block_tp_sharded(cfg: ModelConfig, kind: str, tp: int) -> bool:
+    """Whether ``param_spec`` shards this block kind over a ``tp``-way
+    model axis (block granularity: the attention/MLP/MoE divisibility
+    rules; SSM/xLSTM mixers always replicate)."""
+    heads_div = cfg.n_heads > 0 and cfg.n_heads % tp == 0
+    if kind in ("mamba2", "mlstm", "slstm"):
+        return False
+    if kind in ("moe", "mla_moe"):
+        return cfg.moe_experts > 0 and cfg.moe_experts % tp == 0
+    if kind in ("dense", "mla_dense"):
+        return heads_div or (cfg.d_ff > 0 and cfg.d_ff % tp == 0)
+    return False
+
+
+def _tp_sharded_fraction(cfg: ModelConfig, tp: int) -> float:
+    """Fraction of parameters a ``tp``-way model axis shards, mirroring
+    ``ShardingPolicy.param_spec`` at block granularity (embeddings follow
+    vocab divisibility; replicated-mixer blocks contribute nothing)."""
+    if tp <= 1:
+        return 0.0
+    total = cfg.param_count()
+    if total == 0:
+        return 0.0
+    sharded = 0
+    if cfg.vocab_size % tp == 0:
+        sharded += cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    for kind in cfg.block_pattern:
+        if _block_tp_sharded(cfg, kind, tp):
+            sharded += cfg._block_params(kind)
+    if cfg.shared_attn_every and _block_tp_sharded(cfg, "dense", tp):
+        sharded += cfg._block_params("dense")
+    return min(1.0, sharded / total)
+
+
+def derive_tp(cfg: ModelConfig, dtype_bytes: int = 2,
+              hbm_bytes: float = PROFILE_HBM_BYTES,
+              max_tp: int = PROFILE_MAX_TP) -> int:
+    """Smallest power-of-two TP degree whose per-rank parameter shard fits
+    the HBM budget (capped at one server's tiles).  Models whose params
+    barely shard (replicated mixers) stop growing ``tp`` once extra ways
+    stop shrinking the shard."""
+    def per_rank(t: int) -> float:
+        frac = _tp_sharded_fraction(cfg, t)
+        return cfg.param_count() * dtype_bytes * (1.0 - frac + frac / t)
+
+    tp = 1
+    while tp < max_tp and per_rank(tp) > hbm_bytes:
+        if per_rank(tp * 2) >= per_rank(tp):
+            break  # wider TP shrinks nothing more (e.g. pure-SSM stacks)
+        tp *= 2
+    return tp
+
+
+def collective_profile(cfg: ModelConfig, *, tp: Optional[int] = None,
+                       dtype_bytes: int = 2,
+                       bucket_bytes: int = PROFILE_BUCKET_BYTES,
+                       max_buckets: int = PROFILE_MAX_BUCKETS,
+                       tokens_per_step: int = PROFILE_TOKENS_PER_STEP,
+                       cadence: Optional[int] = None):
+    """Derive a :class:`repro.sim.workload.CollectiveProfile` from a model
+    config: what one training step of this architecture actually puts on
+    the fabric, per DP rank.
+
+      * **buckets** — the per-rank gradient payload
+        ``params · dtype · (1 − frac + frac/tp)`` (TP-sharded fraction per
+        :func:`_tp_sharded_fraction`) cut into ``bucket_bytes`` DDP-style
+        buckets plus a remainder tail; the bucket size grows for
+        rack-scale models (dbrx) so the count stays at ``max_buckets``
+        and per-step pricing stays bounded.
+      * **algorithm mix** — the α–β model's per-bucket choice at the
+        reference DP width (diagnostic; the simulator re-picks per
+        layout).
+      * **cadence** — accumulation steps between reductions; defaults by
+        active-parameter scale (large models batch up).
+      * **tp stream** — 4 activation ALLREDUCEs (2 fwd + 2 bwd, Megatron)
+        of ``tokens · d_model · dtype`` per TP-sharded block per step;
+        zero for replicated-mixer architectures (xLSTM, mamba2 blocks) —
+        exactly the heterogeneity a generic trace erases.
+    """
+    from repro.core.cost_model import LUMORPH_LINK, select_algorithm
+    from repro.sim.workload import CollectiveProfile
+
+    if tp is None:
+        tp = derive_tp(cfg, dtype_bytes)
+    frac = _tp_sharded_fraction(cfg, tp)
+    per_rank = cfg.param_count() * dtype_bytes * (1.0 - frac + frac / tp)
+    # DDP-style flat bucketing: full ``bucket_bytes`` buckets plus a small
+    # remainder tail (the α-regime bucket that picks a different algorithm),
+    # with the bucket size scaled up for rack-scale models so the count
+    # stays bounded at ``max_buckets``.
+    eff = max(float(bucket_bytes), per_rank / max_buckets)
+    n_full = int(per_rank // eff)
+    tail = per_rank - n_full * eff
+    buckets = tuple([eff] * n_full + ([tail] if tail > 1024.0 else []))
+    if not buckets:
+        buckets = (per_rank,)
+    algos = tuple(select_algorithm(b, PROFILE_REF_DP, LUMORPH_LINK)
+                  for b in buckets)
+    if cadence is None:
+        active = cfg.active_param_count()
+        cadence = 1 if active < 8e9 else (2 if active < 60e9 else 4)
+    n_tp_blocks = sum(_block_tp_sharded(cfg, k, tp) for k in cfg.block_pattern)
+    if cfg.kind == "encdec":
+        n_tp_blocks += cfg.enc_layers
+    tp_collectives = 4 * n_tp_blocks if tp > 1 else 0
+    tp_bytes = float(tokens_per_step * cfg.d_model * dtype_bytes)
+    # relative per-step compute weight: √(active params / 1B), clamped —
+    # big models spend longer computing per step, compressing giants so
+    # dbrx-scale tenants still finish inside a sweep scenario
+    scale = min(4.0, max(0.25, math.sqrt(cfg.active_param_count() / 1e9)))
+    return CollectiveProfile(
+        model=cfg.name, tp=tp, buckets=buckets, algos=algos, cadence=cadence,
+        tp_bytes=tp_bytes if tp_collectives else 0.0,
+        tp_collectives=tp_collectives, compute_scale=round(scale, 3))
+
+
+def zoo_profiles(**kw) -> dict:
+    """One derived profile per registered ``configs/`` model (the sweep's
+    heterogeneous workload mix): ``{arch_id: CollectiveProfile}``."""
+    from repro.configs import REGISTRY, get_config
+    return {arch: collective_profile(get_config(arch), **kw)
+            for arch in sorted(REGISTRY)}
 
 
 def make_policy(cfg: ModelConfig, mesh: Mesh, multi_pod: bool | None = None,

@@ -19,12 +19,13 @@ Layers:
 from repro.sim.engine import (Discipline, RackSimulator, compare,
                               make_discipline, simulate)
 from repro.sim.metrics import SimMetrics, TenantRecord
-from repro.sim.workload import (FailureSpec, JobSpec, Trace, fig2a_trace,
-                                pod_churn_trace, poisson_trace)
+from repro.sim.workload import (CollectiveProfile, FailureSpec, JobSpec,
+                                Trace, fig2a_trace, pod_churn_trace,
+                                poisson_trace, strip_profiles, zoo_trace)
 
 __all__ = [
     "Discipline", "RackSimulator", "compare", "make_discipline", "simulate",
     "SimMetrics", "TenantRecord",
-    "FailureSpec", "JobSpec", "Trace", "fig2a_trace", "pod_churn_trace",
-    "poisson_trace",
+    "CollectiveProfile", "FailureSpec", "JobSpec", "Trace", "fig2a_trace",
+    "pod_churn_trace", "poisson_trace", "strip_profiles", "zoo_trace",
 ]

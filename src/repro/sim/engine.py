@@ -120,6 +120,10 @@ class _Job:
     #: memoized locality-ordered participant tuple (photonic pricing);
     #: reset to None whenever ``chips`` changes
     ordered: Optional[tuple[int, ...]] = None
+    #: memoized per-step collective seconds; valid until the slice changes
+    #: (reset alongside ``ordered``), so steady-state phase events price in
+    #: O(1) instead of re-canonicalizing the layout every step
+    coll_s: Optional[float] = None
     #: the job's one in-flight event ``(prio, time)``; lets a morph pause
     #: the job by cancelling (epoch bump) and re-pushing it shifted
     pending: Optional[tuple[int, float]] = None
@@ -222,6 +226,16 @@ class RackSimulator:
                                      chips_per_rack=self.chips_per_rack)
         self.now = 0.0
         self.dead: set[int] = set()
+        #: chip-layout version: bumped by every handler that moves chips
+        #: (arrival grant, departure, failure, morph commit).  Occupancy
+        #: aggregates and the conservation check depend on nothing else,
+        #: so phase-only stretches — the vast majority of events in a
+        #: steady-state trace — reuse the cached values in O(1) instead
+        #: of rescanning every job, free chip, and allocation per event.
+        self._layout_version = 0
+        self._agg: tuple[int, int, Optional[float], int] = (0, 0, None, 0)
+        self._agg_version = -1
+        self._check_version = -1
         self._jobs: dict[str, _Job] = {}  # live (accepted, not departed)
         self._heap: list[tuple[float, int, int, object]] = []
         self._seq = 0
@@ -254,11 +268,14 @@ class RackSimulator:
         self._push_job(max(time, self.now) + delay, prio, job)
 
     def _advance_to(self, time: float) -> None:
-        allocated = sum(len(j.chips) for j in self._jobs.values())
-        requested = sum(j.width for j in self._jobs.values())
+        if self._agg_version != self._layout_version:
+            self._agg = (sum(len(j.chips) for j in self._jobs.values()),
+                         sum(j.width for j in self._jobs.values()),
+                         self._locality(), self._stranded_free())
+            self._agg_version = self._layout_version
+        allocated, requested, locality, stranded = self._agg
         self.metrics.advance(time - self.now, allocated, requested,
-                             locality=self._locality(),
-                             stranded=self._stranded_free())
+                             locality=locality, stranded=stranded)
         self.now = time
 
     def _locality(self) -> Optional[float]:
@@ -312,16 +329,25 @@ class RackSimulator:
         return self.pricer.price(algo, chips, n_bytes)
 
     def _collective_s(self, job: _Job) -> float:
+        if job.coll_s is not None:
+            return job.coll_s
         p = job.width
         if p <= 1:
+            job.coll_s = 0.0
             return 0.0
+        prof = job.spec.profile
         if not self.discipline.photonic:
             # fixed electrical topology: rank-space schedules, so the price
             # depends only on width — algorithm_cost is the IR behind a
             # global cache keyed exactly on (algo, p, bytes)
-            return min(cm.algorithm_cost(a, job.spec.coll_bytes, p,
-                                         self.discipline.link)
-                       for a in self.discipline.algos)
+            if prof is None:
+                cost = min(cm.algorithm_cost(a, job.spec.coll_bytes, p,
+                                             self.discipline.link)
+                           for a in self.discipline.algos)
+            else:
+                cost = self._profile_cost_width(prof, p)
+            job.coll_s = cost
+            return cost
         # participants: the tenant's actual chips (overallocated padding
         # never joins the ALLREDUCE), locality-ordered so frequent
         # low-stride rounds stay inside servers (and, in pod mode, racks);
@@ -332,12 +358,73 @@ class RackSimulator:
                 job.chips[:p], self.tiles_per_server,
                 chips_per_rack=self.chips_per_rack))
         chips = job.ordered
-        cost = self.pricer.cheapest(
-            candidate_algos(self.discipline.algos, chips,
-                            self.chips_per_rack),
-            chips, job.spec.coll_bytes)
+        if prof is None:
+            cost = self.pricer.cheapest(
+                candidate_algos(self.discipline.algos, chips,
+                                self.chips_per_rack),
+                chips, job.spec.coll_bytes)
+        else:
+            cost = self._profile_cost_chips(prof, chips)
         assert cost != float("inf"), \
             f"no admissible collective for {job.spec.tenant} on {chips}"
+        job.coll_s = cost
+        return cost
+
+    def _profile_cost_width(self, prof, p: int) -> float:
+        """Width-only profile pricing (fixed electrical fabrics): the
+        tenant's TP degree is what divides its slice (``gcd``), DP rings
+        reduce each gradient bucket once per ``cadence`` steps, and the
+        TP activation stream runs every step."""
+        tp = math.gcd(prof.tp, p)
+        dp = p // tp
+        algos = self.discipline.algos
+        link = self.discipline.link
+        cost = 0.0
+        if dp > 1:
+            cost += sum(min(cm.algorithm_cost(a, b, dp, link) for a in algos)
+                        for b in prof.buckets) / prof.cadence
+        if tp > 1 and prof.tp_collectives:
+            cost += prof.tp_collectives * min(
+                cm.algorithm_cost(a, prof.tp_bytes, tp, link) for a in algos)
+        return cost
+
+    def _profile_cost_chips(self, prof, chips: tuple[int, ...]) -> float:
+        """Layout-aware profile pricing (photonic fabrics).  Over the
+        locality-ordered slice, TP groups are the *contiguous* blocks
+        ``chips[j*tp:(j+1)*tp]`` (activation ALLREDUCEs stay inside a
+        server whenever the packing allows) and DP rings are the strided
+        complements ``chips[j::tp]``.  Rings are chip-disjoint so they
+        reduce their buckets concurrently — the step pays the slowest
+        ring, amortized over the accumulation cadence — and likewise the
+        slowest TP block paces every step's activation stream.
+        Isomorphic rings/blocks collapse onto one pricer entry via the
+        canonical cache key."""
+        p = len(chips)
+        tp = math.gcd(prof.tp, p)
+        dp = p // tp
+        cost = 0.0
+        if dp > 1:
+            rings: dict = {}
+            for j in range(tp):
+                ring = chips[j::tp]
+                rings.setdefault(self.pricer.cache_key_chips(ring), ring)
+            cost += max(
+                sum(self.pricer.cheapest(
+                    candidate_algos(self.discipline.algos, ring,
+                                    self.chips_per_rack),
+                    ring, b) for b in prof.buckets)
+                for ring in rings.values()) / prof.cadence
+        if tp > 1 and prof.tp_collectives:
+            blocks: dict = {}
+            for j in range(dp):
+                blk = chips[j * tp:(j + 1) * tp]
+                blocks.setdefault(self.pricer.cache_key_chips(blk), blk)
+            cost += prof.tp_collectives * max(
+                self.pricer.cheapest(
+                    candidate_algos(self.discipline.algos, blk,
+                                    self.chips_per_rack),
+                    blk, prof.tp_bytes)
+                for blk in blocks.values())
         return cost
 
     def _reconfig_window(self, chips: Sequence[int]) -> float:
@@ -365,6 +452,7 @@ class RackSimulator:
         self.metrics.tenants[spec.tenant] = rec
         job = _Job(spec=spec, rec=rec, chips=alloc.chips)
         self._jobs[spec.tenant] = job
+        self._layout_version += 1
         # establish the slice's circuits: one MZI window on photonic
         # fabrics (the slower rail OCS window for rack-spanning slices)
         reconf = self._reconfig_window(alloc.chips)
@@ -395,6 +483,7 @@ class RackSimulator:
         job.alive = False
         self.allocator.release(job.spec.tenant)
         del self._jobs[job.spec.tenant]
+        self._layout_version += 1
         job.rec.completed = True
         job.rec.end = self.now
         self.metrics.completed += 1
@@ -425,7 +514,9 @@ class RackSimulator:
         apply_plan(self.allocator, pm.plan, rack=self.rack,
                    dead_chips=self._dead_outside_allocator())
         job.chips = self.allocator.allocations[job.spec.tenant].chips
+        self._layout_version += 1
         job.ordered = None  # future schedules re-priced on the new chips
+        job.coll_s = None
         if pm.plan.kind == "bypass":
             # a partial bypass shrinks by the dead chips the pool could
             # not replace; a full bypass (or a later one that back-fills)
@@ -459,6 +550,7 @@ class RackSimulator:
         if not fresh:
             return
         self.dead.update(fresh)
+        self._layout_version += 1  # dead set + the re-slices below
         self.metrics.failures_injected += len(fresh)
         dead = set(fresh)
         if self.morph is not None:
@@ -499,6 +591,7 @@ class RackSimulator:
                 continue
             job.chips = alloc.chips
             job.ordered = None  # re-derive locality order for the new slice
+            job.coll_s = None
             job.epoch += 1  # invalidate phases scheduled on the old slice
             self.metrics.recoveries += 1
             # reflect the *current* width: a later full-width recovery
@@ -533,8 +626,10 @@ class RackSimulator:
             self._advance_to(time)
             handlers[prio](payload)
             self.metrics.events += 1
-            if self.check_invariants:
+            if (self.check_invariants
+                    and self._check_version != self._layout_version):
                 self._check()
+                self._check_version = self._layout_version
         self.metrics.horizon = self.now
         # pricing fast-path accounting (satellite of the lazy-IR work):
         # cache hit rate, schedules built, candidates pruned, and how many

@@ -17,13 +17,87 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Callable
+import math
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 #: Fig 2a request mix: deliberately awkward sizes (3, 5, 6, 12) that
 #: fragment torus/SiPAC racks, alongside friendly powers of two.
 FIG2A_SIZES = (1, 2, 3, 4, 5, 6, 8, 12, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveProfile:
+    """A tenant's per-step collective mix, derived from its model config.
+
+    The generic trace format prices every tenant as one ALLREDUCE of
+    ``coll_bytes`` over all its chips.  A profile replaces that with the
+    collective structure the tenant's *actual* architecture produces
+    (:func:`repro.sharding.policy.collective_profile` derives one per
+    ``configs/`` model):
+
+      * ``tp`` — model-parallel degree folded inside the slice.  The
+        slice's chips split into ``tp``-chip TP groups (contiguous in
+        locality order, so TP stays on-server) and ``width // tp``-wide
+        data-parallel rings (one per TP rank, strided across groups).
+      * ``buckets`` — per-DP-rank gradient bucket sizes in bytes (already
+        divided by the TP sharding; DDP-style size-targeted cuts).  Each
+        bucket is priced independently, so small buckets land in the
+        α-dominated regime where log-round algorithms win and large ones
+        in the β-dominated Ring regime — the per-bucket algorithm *mix*
+        emerges exactly as in ``optim.grad_comm``.
+      * ``algos`` — per-bucket algorithm hint from the α–β model at a
+        reference width (diagnostic; the simulator still picks the
+        cheapest admissible schedule on the tenant's real layout).
+      * ``cadence`` — steps between gradient reductions (accumulation);
+        bucket cost is amortized ``1/cadence`` per step.
+      * ``tp_bytes`` / ``tp_collectives`` — the per-step activation
+        ALLREDUCE stream inside each TP group (Megatron: 2 forward + 2
+        backward per TP-sharded block).  Architectures whose mixers
+        replicate (SSM/xLSTM) have none — heterogeneity the generic
+        format cannot express.
+      * ``compute_scale`` — relative per-step compute weight (generators
+        multiply their base ``compute_s`` by it).
+    """
+
+    model: str = ""
+    tp: int = 1
+    buckets: tuple[float, ...] = ()
+    algos: tuple[str, ...] = ()
+    cadence: int = 1
+    tp_bytes: float = 0.0
+    tp_collectives: int = 0
+    compute_scale: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "buckets", tuple(float(b) for b in self.buckets))
+        object.__setattr__(self, "algos", tuple(self.algos))
+        if self.tp < 1 or self.cadence < 1:
+            raise ValueError(f"profile {self.model!r}: tp and cadence must be ≥ 1")
+        if any(b <= 0 for b in self.buckets):
+            raise ValueError(f"profile {self.model!r}: bucket sizes must be > 0")
+
+    @property
+    def grad_bytes(self) -> float:
+        """Total per-DP-rank gradient payload per reduction."""
+        return float(sum(self.buckets))
+
+    @property
+    def step_bytes(self) -> float:
+        """Mean bytes a rank ships per step (cadence-amortized gradients
+        plus the TP activation stream) — the generic-trace equivalent."""
+        return self.grad_bytes / self.cadence + self.tp_collectives * self.tp_bytes
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "CollectiveProfile":
+        return cls(model=rec.get("model", ""), tp=int(rec.get("tp", 1)),
+                   buckets=tuple(rec.get("buckets", ())),
+                   algos=tuple(rec.get("algos", ())),
+                   cadence=int(rec.get("cadence", 1)),
+                   tp_bytes=float(rec.get("tp_bytes", 0.0)),
+                   tp_collectives=int(rec.get("tp_collectives", 0)),
+                   compute_scale=float(rec.get("compute_scale", 1.0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +108,11 @@ class JobSpec:
     gradient ALLREDUCE of ``coll_bytes`` bytes priced by the discipline's
     cost model, so a job's nominal duration is
     ``steps * (compute_s + collective_time)``.
+
+    ``profile`` (optional, serialized only when present so the classic
+    JSONL stays byte-identical) replaces the single generic ALLREDUCE
+    with the tenant's model-derived :class:`CollectiveProfile` — bucketed
+    DP gradients over ``width // tp`` rings plus the TP activation stream.
     """
 
     tenant: str
@@ -42,6 +121,7 @@ class JobSpec:
     steps: int  # training steps before departure
     compute_s: float = 1.0  # compute time per step
     coll_bytes: float = float(4 << 20)  # ALLREDUCE bytes per step
+    profile: Optional[CollectiveProfile] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +147,12 @@ class Trace:
     def to_jsonl(self) -> str:
         lines = []
         for j in self.jobs:
-            lines.append(json.dumps({"type": "job", **dataclasses.asdict(j)}))
+            rec = dataclasses.asdict(j)
+            if j.profile is None:
+                # profile-free jobs serialize exactly as before the profile
+                # extension — old goldens and readers stay byte-identical
+                del rec["profile"]
+            lines.append(json.dumps({"type": "job", **rec}))
         for f in self.failures:
             lines.append(json.dumps({"type": "failure", "time": f.time,
                                      "chips": list(f.chips)}))
@@ -84,7 +169,10 @@ class Trace:
             rec = json.loads(line)
             kind = rec.pop("type")
             if kind == "job":
-                jobs.append(JobSpec(**rec))
+                prof = rec.pop("profile", None)
+                if prof is not None:
+                    prof = CollectiveProfile.from_json(prof)
+                jobs.append(JobSpec(profile=prof, **rec))
             elif kind == "failure":
                 failures.append(FailureSpec(rec["time"], tuple(rec["chips"])))
             else:
@@ -225,6 +313,60 @@ def pod_churn_trace(n_events: int = 200, *, n_chips: int = 128,
             chip = int(rng.randint(n_chips))
             failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))
     return Trace(tuple(jobs), tuple(failures))
+
+
+def zoo_trace(n_jobs: int, profiles: Sequence[CollectiveProfile], *,
+              arrival_rate: float = 0.5, mean_steps: float = 20.0,
+              compute_s: float = 1.0, n_chips: int = 64,
+              failure_rate: float = 0.0, seed: int = 0) -> Trace:
+    """Heterogeneous multi-model churn: every tenant samples a model from
+    the ``profiles`` zoo, requests a ``tp × dp`` slice (its profile's TP
+    degree times a power-of-two data-parallel width), and prices its
+    steps from its *own* collective mix — bucketed DP gradients plus the
+    TP activation stream — instead of one generic ALLREDUCE.
+
+    ``coll_bytes`` is set to the profile's per-reduction gradient payload,
+    so :func:`strip_profiles` yields the exact generic-trace counterpart
+    (same arrivals, sizes, lifetimes; only the pricing model differs).
+    The generator is deterministic in ``seed`` and, like the other
+    generators, draws jobs before failures.
+    """
+    if not profiles:
+        raise ValueError("zoo_trace needs at least one CollectiveProfile")
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    jobs = []
+    for i in range(n_jobs):
+        t += rng.exponential(1.0 / arrival_rate)
+        prof = profiles[int(rng.randint(len(profiles)))]
+        max_dp = max(1, n_chips // prof.tp)
+        dp = 1 << int(rng.randint(0, int(math.log2(max_dp)) + 1))
+        chips = min(n_chips, prof.tp * dp)
+        steps = int(rng.exponential(mean_steps)) + 1
+        jobs.append(JobSpec(tenant=f"t{i}", arrival=round(t, 6), chips=chips,
+                            steps=steps,
+                            compute_s=round(compute_s * prof.compute_scale, 6),
+                            coll_bytes=prof.grad_bytes, profile=prof))
+    failures = []
+    if failure_rate > 0:
+        horizon = t
+        ft = 0.0
+        while True:
+            ft += rng.exponential(1.0 / failure_rate)
+            if ft >= horizon:
+                break
+            chip = int(rng.randint(n_chips))
+            failures.append(FailureSpec(time=round(ft, 6), chips=(chip,)))
+    return Trace(tuple(jobs), tuple(failures))
+
+
+def strip_profiles(trace: Trace) -> Trace:
+    """The generic-ALLREDUCE counterpart of a profiled trace: identical
+    arrivals, sizes, lifetimes, and failures, but every tenant priced as
+    one ``coll_bytes`` ALLREDUCE over all its chips — the baseline the
+    ``claim_profiles_matter`` sweep comparison replays."""
+    return Trace(tuple(dataclasses.replace(j, profile=None)
+                       for j in trace.jobs), trace.failures)
 
 
 def failure_injection_trace(*, n_chips: int = 64, seed: int = 0) -> Trace:

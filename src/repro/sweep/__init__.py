@@ -1,0 +1,11 @@
+"""Multiprocess scenario sweep over the rack/pod simulator — see
+:mod:`repro.sweep.runner` and ``docs/sweep.md``."""
+
+from repro.sweep.runner import (PARETO_METRICS, Scenario, WORKLOADS,
+                                build_trace, default_profiles,
+                                pareto_report, run_scenario, run_sweep,
+                                sweep_grid)
+
+__all__ = ["PARETO_METRICS", "Scenario", "WORKLOADS", "build_trace",
+           "default_profiles", "pareto_report", "run_scenario",
+           "run_sweep", "sweep_grid"]

@@ -1,0 +1,50 @@
+"""Benchmark harness plumbing: the ``--json`` overwrite guard and the
+``--jobs`` passthrough registration."""
+
+import inspect
+import json
+
+import pytest
+
+from benchmarks.run import _check_json_target, _modules
+
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+def test_json_guard_allows_fresh_and_same_benchmark(tmp_path):
+    target = tmp_path / "BENCH_sweep.json"
+    _check_json_target(str(target), ["bench_sweep"])  # missing file: fine
+    _write(target, {"schema": 1,
+                    "benchmarks": [{"benchmark": "bench_sweep", "rows": []}]})
+    _check_json_target(str(target), ["bench_sweep"])  # same bench: fine
+    # re-running a superset over its own file is fine too
+    _check_json_target(str(target), ["bench_sweep", "sim_rack"])
+
+
+def test_json_guard_rejects_foreign_benchmark_file(tmp_path):
+    target = tmp_path / "BENCH_sim_scale.json"
+    _write(target, {"schema": 1,
+                    "benchmarks": [{"benchmark": "bench_sim_scale",
+                                    "rows": []}]})
+    with pytest.raises(SystemExit):
+        _check_json_target(str(target), ["bench_sweep"])
+
+
+def test_json_guard_rejects_non_results_file(tmp_path):
+    target = tmp_path / "notes.json"
+    target.write_text("not json at all")
+    with pytest.raises(SystemExit):
+        _check_json_target(str(target), ["bench_sweep"])
+    _write(target, {"something": "else"})
+    with pytest.raises(SystemExit):
+        _check_json_target(str(target), ["bench_sweep"])
+
+
+def test_sweep_benchmark_registered_with_jobs_param():
+    mods = _modules()
+    assert "bench_sweep" in mods
+    params = inspect.signature(mods["bench_sweep"].run).parameters
+    assert "jobs" in params and "seed" in params

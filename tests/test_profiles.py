@@ -1,0 +1,174 @@
+"""CollectiveProfile: derivation from model configs, profile-aware
+pricing in the engine, and the extended (backward-compatible) Trace
+JSONL."""
+
+import json
+import math
+import pathlib
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import REGISTRY, get_config
+from repro.sharding.policy import (PROFILE_MAX_TP, collective_profile,
+                                   derive_tp, zoo_profiles)
+from repro.sim.engine import simulate
+from repro.sim.workload import (CollectiveProfile, FailureSpec, JobSpec,
+                                Trace, strip_profiles, zoo_trace)
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+# -- derivation --------------------------------------------------------------
+@pytest.mark.parametrize("arch", sorted(REGISTRY))
+def test_every_config_derives_a_valid_profile(arch):
+    cfg = get_config(arch)
+    prof = collective_profile(cfg)
+    assert prof.model == cfg.name
+    assert 1 <= prof.tp <= PROFILE_MAX_TP
+    assert prof.tp & (prof.tp - 1) == 0, "tp must be a power of two"
+    assert prof.buckets and all(b > 0 for b in prof.buckets)
+    assert len(prof.algos) == len(prof.buckets)
+    assert prof.cadence >= 1
+    assert prof.grad_bytes > 0
+    assert prof.step_bytes > 0
+    assert 0.25 <= prof.compute_scale <= 4.0
+    if prof.tp == 1:
+        assert prof.tp_collectives == 0 and prof.tp_bytes == 0.0
+    else:
+        assert prof.tp_collectives > 0 and prof.tp_bytes > 0
+    # the per-rank payload reflects TP sharding: wider TP never grows it
+    wider = collective_profile(cfg, tp=min(PROFILE_MAX_TP, prof.tp * 2))
+    assert wider.grad_bytes <= prof.grad_bytes + 1e-6
+
+
+def test_zoo_covers_registry_and_is_heterogeneous():
+    profs = zoo_profiles()
+    assert sorted(profs) == sorted(REGISTRY)
+    tps = {p.tp for p in profs.values()}
+    assert len(tps) > 1, "zoo should mix TP degrees"
+    # SSM/replicated-mixer architectures carry no TP activation stream;
+    # tensor-sharded transformers do — heterogeneity the generic single-
+    # ALLREDUCE format cannot express
+    assert any(p.tp_collectives == 0 for p in profs.values())
+    assert any(p.tp_collectives > 0 for p in profs.values())
+
+
+def test_derive_tp_respects_hbm_and_ssm_limits():
+    # dbrx (132B MoE) cannot fit a dp shard on one rank: TP maxes out
+    assert derive_tp(get_config("dbrx-132b")) == PROFILE_MAX_TP
+    # tiny models need no TP at all
+    assert derive_tp(get_config("whisper-tiny")) == 1
+    # pure-mixer-replicated stacks stop widening once nothing more shards
+    xlstm = get_config("xlstm-125m")
+    assert derive_tp(xlstm) == 1
+
+
+# -- engine pricing ----------------------------------------------------------
+def _one_job_trace(arch: str, chips: int = 16) -> Trace:
+    prof = collective_profile(get_config(arch))
+    job = JobSpec(tenant=f"{arch}-0", arrival=0.0, chips=chips, steps=5,
+                  compute_s=1.0, coll_bytes=prof.grad_bytes, profile=prof)
+    return Trace((job,))
+
+
+@pytest.mark.parametrize("arch", ["dbrx-132b",  # MoE, tp > 1
+                                  "xlstm-125m"])  # SSM, tp == 1
+def test_profile_pricing_differs_from_generic(arch):
+    """The tentpole's point: a tenant priced by its model's real
+    collective mix (bucketed DP rings + TP activation stream) costs
+    differently than the same bytes as one generic ALLREDUCE."""
+    trace = _one_job_trace(arch)
+    for kind in ("lumorph", "torus"):
+        with_prof = simulate(kind, trace).summary()
+        generic = simulate(kind, strip_profiles(trace)).summary()
+        assert with_prof["mean_collective_us"] != generic[
+            "mean_collective_us"], (kind, arch)
+        # same trace skeleton either way
+        assert with_prof["accepted"] == generic["accepted"]
+        assert with_prof["events"] == generic["events"]
+
+
+def test_profile_pricing_is_deterministic():
+    trace = _one_job_trace("deepseek-v2-lite-16b")
+    a = simulate("lumorph", trace).summary()
+    b = simulate("lumorph", trace).summary()
+    assert a == b
+
+
+def test_zoo_trace_round_trips_and_replays(tmp_path):
+    profs = [p for _, p in sorted(zoo_profiles().items())]
+    trace = zoo_trace(12, profs, n_chips=64, failure_rate=0.05, seed=11)
+    assert any(j.profile is not None for j in trace.jobs)
+    path = tmp_path / "zoo.jsonl"
+    trace.save(path)
+    loaded = Trace.load(path)
+    assert loaded == trace
+    assert (simulate("lumorph", loaded).summary()
+            == simulate("lumorph", trace).summary())
+
+
+# -- JSONL compatibility -----------------------------------------------------
+def test_old_traces_still_load_without_profiles():
+    trace = Trace.load(GOLDEN / "trace_0.jsonl")
+    assert trace.jobs and all(j.profile is None for j in trace.jobs)
+    # and serialize back byte-identically (the golden contract)
+    assert trace.to_jsonl() == (GOLDEN / "trace_0.jsonl").read_text()
+
+
+def test_profile_free_jsonl_has_no_profile_key():
+    job = JobSpec(tenant="t0", arrival=0.0, chips=4, steps=3)
+    line = Trace((job,)).to_jsonl().splitlines()[0]
+    assert "profile" not in json.loads(line)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=1e3, max_value=1e12), min_size=1,
+                max_size=8),
+       st.integers(min_value=0, max_value=3),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=200),
+       st.booleans())
+def test_trace_jsonl_round_trip_property(buckets, tp_log2, cadence,
+                                         tp_collectives, with_failures):
+    """Any trace — profiled, generic, or mixed — survives
+    ``to_jsonl``/``from_jsonl`` exactly (dataclass equality, which for
+    floats means bit-equality: json round-trips repr faithfully)."""
+    tp = 1 << tp_log2
+    prof = CollectiveProfile(
+        model="prop", tp=tp, buckets=tuple(buckets),
+        algos=("ring",) * len(buckets), cadence=cadence,
+        tp_bytes=4096.0 * tp if tp_collectives else 0.0,
+        tp_collectives=tp_collectives if tp > 1 else 0,
+        compute_scale=1.5)
+    jobs = (
+        JobSpec(tenant="a", arrival=0.0, chips=8, steps=4, profile=prof),
+        JobSpec(tenant="b", arrival=1.5, chips=4, steps=2),  # generic
+    )
+    failures = (FailureSpec(2.25, (1, 5)),) if with_failures else ()
+    trace = Trace(jobs, failures)
+    assert Trace.from_jsonl(trace.to_jsonl()) == trace
+
+
+def test_profile_from_json_defaults():
+    prof = CollectiveProfile.from_json({"buckets": [1024.0]})
+    assert prof.tp == 1 and prof.cadence == 1
+    assert prof.buckets == (1024.0,)
+    assert prof.tp_collectives == 0
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError):
+        CollectiveProfile(tp=0)
+    with pytest.raises(ValueError):
+        CollectiveProfile(cadence=0)
+    with pytest.raises(ValueError):
+        CollectiveProfile(buckets=(0.0,))
+
+
+def test_step_bytes_accounting():
+    prof = CollectiveProfile(tp=2, buckets=(100.0, 50.0), cadence=2,
+                             tp_bytes=10.0, tp_collectives=4)
+    assert prof.grad_bytes == 150.0
+    assert math.isclose(prof.step_bytes, 150.0 / 2 + 4 * 10.0)

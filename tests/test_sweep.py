@@ -1,0 +1,199 @@
+"""Sweep engine: grid construction, serial/parallel determinism, pricer
+warm-start transparency, and the Pareto report."""
+
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.pricing import SchedulePricer
+from repro.core.rack import LumorphRack
+from repro.core.scheduler import order_for_locality
+from repro.sweep import (Scenario, build_trace, pareto_report, run_scenario,
+                         run_sweep, sweep_grid)
+from repro.sharding.policy import collective_profile
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="module")
+def profiles():
+    # two cheap-to-derive profiles keep the sweeps in this module fast;
+    # the full zoo is exercised by test_profiles/bench_sweep
+    return (collective_profile(get_config("whisper-tiny")),
+            collective_profile(get_config("xlstm-125m")))
+
+
+def _small_grid():
+    return sweep_grid(seeds=(0, 1), disciplines=("lumorph", "torus"),
+                      fabrics=((64, 1),), workloads=("zoo", "zoo-generic"),
+                      morphs=(False, True), n_jobs=10)
+
+
+# -- grid --------------------------------------------------------------------
+def test_grid_drops_degenerate_combos():
+    grid = sweep_grid(seeds=(0,), disciplines=("lumorph", "torus", "sipac"),
+                      fabrics=((64, 1), (128, 2)),
+                      workloads=("zoo",), morphs=(False, True))
+    # single rack: lumorph ×2 morphs + torus + sipac = 4;
+    # pod: photonic only, ×2 morphs = 2
+    assert len(grid) == 6
+    assert all(s.discipline == "lumorph" for s in grid if s.n_racks > 1)
+    assert not any(s.morph and s.discipline != "lumorph" for s in grid)
+
+
+def test_grid_rejects_unknown_workload():
+    with pytest.raises(ValueError):
+        Scenario(workload="nope")
+
+
+def test_policy_and_fabric_tags():
+    s = Scenario(discipline="lumorph", morph=True, n_racks=2, n_chips=128,
+                 span_racks=False)
+    assert s.policy == "lumorph+morph+confined"
+    assert s.fabric_sig == ("lumorph", 128, 2)
+    assert Scenario(workload="zoo").workload_class == "profiled"
+    assert Scenario(workload="zoo-generic").workload_class == "generic"
+
+
+def test_zoo_generic_is_the_same_trace_stripped(profiles):
+    s_zoo = Scenario(seed=3, workload="zoo", n_jobs=8)
+    s_gen = Scenario(seed=3, workload="zoo-generic", n_jobs=8)
+    zoo = build_trace(s_zoo, profiles)
+    gen = build_trace(s_gen, profiles)
+    assert any(j.profile is not None for j in zoo.jobs)
+    assert all(j.profile is None for j in gen.jobs)
+    # identical skeletons: the control arm differs only in the profiles
+    for a, b in zip(zoo.jobs, gen.jobs):
+        assert (a.tenant, a.arrival, a.chips, a.steps, a.coll_bytes) \
+            == (b.tenant, b.arrival, b.chips, b.steps, b.coll_bytes)
+    assert zoo.failures == gen.failures
+
+
+# -- determinism -------------------------------------------------------------
+def test_serial_sweep_is_deterministic(profiles):
+    grid = _small_grid()
+    a = run_sweep(grid, jobs=1, profiles=profiles)
+    b = run_sweep(grid, jobs=1, profiles=profiles)
+    assert [r["summary"] for r in a] == [r["summary"] for r in b]
+    # results come back in scenario order
+    import dataclasses
+    assert [r["scenario"] for r in a] == [dataclasses.asdict(s) for s in grid]
+
+
+def test_parallel_sweep_matches_serial_bit_for_bit(profiles):
+    """The acceptance criterion: 4 spawn workers, summaries byte-identical
+    to the serial run of the same grid."""
+    grid = _small_grid()
+    serial = run_sweep(grid, jobs=1, profiles=profiles)
+    parallel = run_sweep(grid, jobs=4, profiles=profiles)
+    assert [r["summary"] for r in serial] == [r["summary"] for r in parallel]
+    assert [r["pricing"]["transfers_materialized"] for r in parallel] \
+        == [0] * len(grid)
+
+
+def test_warm_start_is_value_transparent(profiles):
+    """Seeding a scenario's pricer from another scenario's exported
+    entries must not change its results — only its hit rate."""
+    s = Scenario(seed=5, discipline="lumorph", workload="zoo", n_jobs=12,
+                 morph=True)
+    cold = run_scenario(s, profiles, warm=None)
+    warm_pool: dict = {}
+    run_scenario(Scenario(seed=9, discipline="lumorph", workload="zoo",
+                          n_jobs=12, morph=True), profiles, warm=warm_pool)
+    assert warm_pool, "first run should have exported entries"
+    warmed = run_scenario(s, profiles, warm=warm_pool)
+    assert warmed["timing"]["warm_seeded"] > 0
+    assert warmed["summary"] == cold["summary"]
+
+
+def test_fresh_caches_does_not_change_results(profiles):
+    s = Scenario(seed=2, workload="zoo", n_jobs=10)
+    a = run_scenario(s, profiles, fresh_caches=True)
+    b = run_scenario(s, profiles, fresh_caches=False)
+    assert a["summary"] == b["summary"]
+
+
+# -- pricer warm-start API ---------------------------------------------------
+def _pricer():
+    rack = LumorphRack(n_servers=4, tiles_per_server=8,
+                       fibers_per_server_pair=32)
+    return SchedulePricer(cm.LUMORPH_LINK, rack=rack, tiles_per_server=8)
+
+
+def test_export_seed_round_trip():
+    src = _pricer()
+    layouts = [tuple(order_for_locality(tuple(range(i, i + 8)), 8))
+               for i in (0, 8, 16)]
+    want = {}
+    for chips in layouts:
+        for algo in ("ring", "lumorph2"):
+            want[(algo, chips)] = src.price(algo, chips, 1 << 20)
+    entries = src.export_entries()
+    assert len(entries) == len(src)
+
+    dst = _pricer()
+    installed = dst.seed_entries(entries)
+    assert installed == len(entries)
+    hits0 = dst.stats.hits
+    for (algo, chips), cost in want.items():
+        assert dst.price(algo, chips, 1 << 20) == cost
+    # every price was served from the seeded cache, and none was rebuilt
+    assert dst.stats.hits == hits0 + len(want)
+    assert dst.stats.built == 0
+
+
+def test_export_entries_mru_first_and_limited():
+    src = _pricer()
+    chips_a = tuple(range(8))
+    chips_b = tuple(range(8, 16))
+    src.price("ring", chips_a, 1 << 20)
+    src.price("ring", chips_b, 1 << 20)
+    src.price("ring", chips_a, 1 << 20)  # touch a: now MRU
+    entries = src.export_entries(limit=1)
+    assert len(entries) == 1
+    key = entries[0][0]
+    assert key[1] == src.cache_key_chips(chips_a)
+
+
+def test_seed_entries_never_clobbers():
+    src = _pricer()
+    chips = tuple(range(8))
+    cost = src.price("ring", chips, 1 << 20)
+    dst = _pricer()
+    real = dst.price("ring", chips, 1 << 20)
+    assert real == cost
+    poisoned = [(k, -1.0) for k, _ in src.export_entries()]
+    assert dst.seed_entries(poisoned) == 0  # already present: left alone
+    assert dst.price("ring", chips, 1 << 20) == real
+
+
+# -- report ------------------------------------------------------------------
+def test_pareto_report_shape(profiles):
+    grid = _small_grid()
+    results = run_sweep(grid, jobs=1, profiles=profiles)
+    report = pareto_report(results)
+    assert report["n_scenarios"] == len(grid)
+    assert set(report["classes"]) == {"profiled", "generic"}
+    for cls in report["classes"].values():
+        assert set(cls["policies"]) == {"lumorph", "lumorph+morph", "torus"}
+        for agg in cls["policies"].values():
+            assert agg["scenarios"] == 2  # one per seed
+            assert 0.0 <= agg["acceptance_rate"] <= 1.0
+        for key in ("acceptance_rate", "goodput_chip_seconds",
+                    "mean_jct_s", "fragmentation_rejects"):
+            assert sorted(cls["rankings"][key]) == sorted(cls["policies"])
+        assert cls["pareto_front"]
+        assert set(cls["pareto_front"]) <= set(cls["policies"])
+
+
+def test_pareto_front_dominance():
+    def fake(policy, wc, acc, goodput, jct, frags):
+        return {"workload_class": wc, "policy": policy,
+                "summary": {"acceptance_rate": acc,
+                            "goodput_chip_seconds": goodput,
+                            "mean_jct_s": jct,
+                            "fragmentation_rejects": frags}}
+    results = [fake("good", "generic", 0.9, 100.0, 1.0, 0),
+               fake("bad", "generic", 0.5, 50.0, 2.0, 3),
+               fake("tradeoff", "generic", 0.95, 40.0, 3.0, 1)]
+    front = pareto_report(results)["classes"]["generic"]["pareto_front"]
+    assert "good" in front and "tradeoff" in front
+    assert "bad" not in front
