@@ -7,6 +7,8 @@ CSV rows for:
   * fig2a_fragmentation    — multi-tenant acceptance/utilization (Fig 2a)
   * sim_rack               — event-driven multi-tenant rack simulation
   * sim_morph              — online slice morphing vs the static baseline
+  * sim_serve              — serving autoscaler vs static provisioning
+                             (SLO attainment + chip-seconds, both traces)
   * sim_pod                — pod-scale fabric: hierarchical collectives +
                              rack-spanning allocation vs flat/confined
   * bench_sim_scale        — planner latency (schedules priced/s, fast vs
@@ -37,10 +39,11 @@ def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             bench_overlap, bench_sim_scale, bench_sweep,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_morph, sim_pod, sim_rack)
+                            fig4b_collectives, sim_morph, sim_pod, sim_rack,
+                            sim_serve)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, sim_morph, sim_pod, bench_sim_scale, bench_sweep,
-            bench_kernels, bench_collective_exec, bench_overlap]
+            sim_rack, sim_morph, sim_serve, sim_pod, bench_sim_scale,
+            bench_sweep, bench_kernels, bench_collective_exec, bench_overlap]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 

@@ -1,0 +1,171 @@
+"""Morph-driven serving autoscaler vs static provisioning (`repro.serve`).
+
+Three provisioning policies serve identical request traces (two tenants,
+staggered peaks, diurnal *and* bursty arrival processes) on the LUMORPH
+discipline:
+
+  * **auto**   — tenants start at the minimal two-replica slice (no
+    a-priori sizing at all) and the SLO-driven autoscaler resizes them
+    live via priced, invariant-checked morph plans (scale-up admission
+    through the shared SchedulePricer, scale-down drains KV to survivors
+    and returns chips to the pool);
+  * **static-mean** — a-priori provisioning for the trace's *mean* rate
+    at ρ ≤ 0.7 (the industry-standard headroom), fixed for the run;
+  * **static-peak** — same, for the trace's *peak* window rate: the
+    attainment ceiling, bought with chips that idle off-peak.
+
+Claim (emitted as a PASS/FAIL row, gated in CI):
+
+  * ``claim_serve_autoscale`` — on **both** traces, autoscaling attains
+    ≥ static-mean's SLO rate with strictly fewer chip-seconds, and holds
+    ≥ 95 % attainment where static-peak spends strictly more
+    chip-seconds.  The win is structural: a reactive policy runs lean
+    (ρ → headroom 0.9) because it can correct, while a static provisioner
+    must hold ρ ≤ 0.7 *and* still eats every peak it under-guessed.
+
+``BENCH_SERVE_QUICK=1`` shortens the horizon (CI fast job); claims are
+pinned for both settings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.core import cost_model as cm
+from repro.serve import required_replicas, serve_trace
+from repro.serve.autoscale import AutoscaleConfig
+from repro.serve.tenant import SlicePrices, granularity
+from repro.sim import RackSimulator, Trace
+from repro.sim.workload import CollectiveProfile
+
+N_CHIPS = 128
+WINDOW_S = 60.0
+#: (base, peak) requests/s per tenant: consumer diurnal traffic swings
+#: ~20× trough-to-peak; the bursty trace rides a gentler daily carrier
+#: with 1.8× flash-crowd multipliers on top (ramped over one window —
+#: see ``bursty_windows``).  Rates are high enough that a tenant's slice
+#: is ~5–18 replicas — at toy scale, ±1-replica quantization noise
+#: swamps the headroom economics the benchmark exists to measure
+RATES = {"diurnal": (4.0, 72.0), "bursty": (8.0, 40.0)}
+BURST_MULT = 1.8
+PROMPT_TOKENS = 2048.0
+OUTPUT_TOKENS = 256.0
+#: interactive-chat SLOs: seconds-scale TTFT (the M/M/1 tail is then
+#: steep — ρ≈0.85 still attains — which is what lets a reactive policy
+#: run leaner than a ρ≤0.7 static provisioner), strict per-token TPOT
+SLO_TTFT_S = 3.0
+SLO_TPOT_S = 0.05
+
+#: a 7B-class TP=4 serving model (hand-built so the benchmark never
+#: imports the jax-facing configs/ stack): Megatron TP stream of 4
+#: collectives per layer over 32 layers, bf16 activations at 4096 tokens
+PROFILE = CollectiveProfile(
+    model="serve-7b", tp=4,
+    buckets=(64e6, 64e6, 64e6, 32e6), algos=("ring",) * 4,
+    tp_bytes=4096 * 2048 * 2.0, tp_collectives=128, compute_scale=2.6)
+
+
+def _horizon() -> float:
+    # quick mode halves the simulated day (the sim itself runs in under a
+    # second either way — the full sweep costs wall-clock in the *sweep*
+    # harness, not here); below ~60 windows/day the diurnal ramp
+    # compresses past what any reactive policy could track
+    return 3600.0 if os.environ.get("BENCH_SERVE_QUICK") else 7200.0
+
+
+def _sizing_prices(prof: CollectiveProfile) -> SlicePrices:
+    """Layout-free price estimate for a-priori provisioning: the TP
+    collective at rank-space LUMORPH cost (what an operator sizing a
+    deployment would compute — the engine then prices the real layout).
+    KV handoff is not part of replica sizing (it gates neither roofline)."""
+    g = granularity(prof)
+
+    def tp(n_bytes: float) -> float:
+        if g <= 1 or not prof.tp_collectives:
+            return 0.0
+        return min(cm.algorithm_cost(a, n_bytes, g, cm.LUMORPH_LINK)
+                   for a in ("ring", "lumorph2", "lumorph4"))
+
+    return SlicePrices(
+        tp_prefill_s=tp(prof.tp_bytes),
+        tp_decode_s=tp(prof.tp_bytes * 16 / 4096.0),
+        kv_base_s=0.0, kv_per_byte_s=0.0)
+
+
+def _provision(trace: Trace, rho_target: float, mode: str) -> Trace:
+    """Re-issue every serving tenant at a provisioned size: the trace's
+    ``mean`` or ``peak`` window rate (the a-priori static arms), or its
+    ``first`` window's rate (what a deployer sizing for launch-day
+    traffic knows — the autoscaler's starting point); training jobs pass
+    through untouched."""
+    prices = _sizing_prices(PROFILE)
+    jobs = []
+    for j in trace.jobs:
+        if j.serve is None:
+            jobs.append(j)
+            continue
+        g = granularity(j.profile)
+        if mode == "peak":
+            rate = max(w.rate for w in j.serve.windows)
+        elif mode == "first":
+            rate = j.serve.windows[0].rate
+        else:
+            rate = j.serve.total_requests / j.serve.horizon_s
+        n = required_replicas(j.serve, j.profile, prices, rate=rate,
+                              rho_target=rho_target)
+        jobs.append(dataclasses.replace(j, chips=max(2, n) * g))
+    return Trace(jobs, trace.failures)
+
+
+def _trace(pattern: str, seed: int) -> Trace:
+    base, peak = RATES[pattern]
+    return serve_trace(
+        2, [PROFILE], pattern=pattern, horizon_s=_horizon(),
+        window_s=WINDOW_S, base_rate=base, peak_rate=peak,
+        prompt_tokens=PROMPT_TOKENS, output_tokens=OUTPUT_TOKENS,
+        slo_ttft_s=SLO_TTFT_S, slo_tpot_s=SLO_TPOT_S, seed=seed,
+        # flash crowds: rare (~9 % of windows) and short — the regime
+        # where paying for burst capacity only while it is needed wins
+        p_burst=1.0 / 40.0, mean_burst_windows=4.0, burst_mult=BURST_MULT)
+
+
+def _run(trace: Trace, autoscale) -> dict:
+    sim = RackSimulator("lumorph", trace, n_chips=N_CHIPS,
+                        serve_autoscale=autoscale)
+    return sim.run().serve_summary()
+
+
+def run(seed: int = 0) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    ok_all = True
+    for pattern in ("diurnal", "bursty"):
+        base = _trace(pattern, seed)
+        mean_trace = _provision(base, rho_target=0.7, mode="mean")
+        peak_trace = _provision(base, rho_target=0.7, mode="peak")
+        auto_trace = _provision(base, rho_target=0.9, mode="first")
+        auto = _run(auto_trace, AutoscaleConfig(max_step_up=8))
+        mean = _run(mean_trace, None)
+        peak = _run(peak_trace, None)
+        for tag, s in (("auto", auto), ("static_mean", mean),
+                       ("static_peak", peak)):
+            p = f"sim_serve/{pattern}/{tag}"
+            lines.append(f"{p}/slo_attainment,,{s['slo_attainment']}")
+            lines.append(f"{p}/chip_seconds,,{s['serve_chip_seconds']}")
+            lines.append(f"{p}/ttft_p99_s,,{s['ttft_p99_s']}")
+            lines.append(f"{p}/tpot_p99_s,,{s['tpot_p99_s']}")
+            lines.append(f"{p}/goodput_per_chip_s,,{s['goodput_per_chip_s']}")
+        lines.append(f"sim_serve/{pattern}/auto/scale_ups,,{auto['scale_ups']}")
+        lines.append(f"sim_serve/{pattern}/auto/scale_downs,,"
+                     f"{auto['scale_downs']}")
+        lines.append(f"sim_serve/{pattern}/auto/kv_handoff_bytes,,"
+                     f"{auto['kv_handoff_bytes']}")
+        ok = (auto["slo_attainment"] >= mean["slo_attainment"]
+              and auto["serve_chip_seconds"] < mean["serve_chip_seconds"]
+              and auto["slo_attainment"] >= 0.95
+              and peak["serve_chip_seconds"] > auto["serve_chip_seconds"])
+        lines.append(f"sim_serve/{pattern}/ok,,{'PASS' if ok else 'FAIL'}")
+        ok_all = ok_all and ok
+    lines.append(f"sim_serve/claim_serve_autoscale,,"
+                 f"{'PASS' if ok_all else 'FAIL'}")
+    return lines

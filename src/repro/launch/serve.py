@@ -19,6 +19,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tf
 from repro.models import attention as attn_lib
+from repro.serve import metrics as serve_metrics
 from repro.sharding.policy import make_policy
 
 
@@ -46,6 +47,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.gen < 1:
+        raise SystemExit("--gen must be >= 1: serving emits at least the "
+                         "first token (TTFT is undefined otherwise)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.kind == "encdec":
@@ -72,10 +76,15 @@ def main(argv=None) -> dict:
     jax.block_until_ready(cur)
     t_decode = time.time() - t0
     out = jnp.concatenate(generated, axis=1)
+    # report latency under the shared vocabulary of repro.serve.metrics so
+    # this JSON is key-comparable with the simulator's serve_summary()
+    n_steps = max(1, args.gen - 1)
     result = {
         "batch": args.batch,
         "prefill_s": round(t_prefill, 3),
-        "decode_tok_s": round(args.batch * (args.gen - 1) / max(t_decode, 1e-9), 1),
+        "decode_tok_s": round(args.batch * n_steps / max(t_decode, 1e-9), 1),
+        serve_metrics.TTFT_S: round(t_prefill, 6),
+        serve_metrics.TPOT_S: round(t_decode / n_steps, 6),
         "generated_shape": list(out.shape),
         "finite": bool(jnp.isfinite(logits).all()),
     }

@@ -17,14 +17,16 @@ fabric's 3.7 µs MZI reprogramming and Schedule-IR state transfers.
 
 from repro.morph.migrate import (MorphReport, apply_plan, check_conservation,
                                  execute)
-from repro.morph.plan import (BYPASS, COMPACTION, MorphCost, MorphError,
-                              MorphPlan, pack_layout, plan_bypass,
-                              plan_compaction)
+from repro.morph.plan import (BYPASS, COMPACTION, SCALE_DOWN, SCALE_UP,
+                              MorphCost, MorphError, MorphPlan, pack_layout,
+                              plan_bypass, plan_compaction, plan_scale_down,
+                              plan_scale_up)
 from repro.morph.policy import MorphConfig, MorphPolicy, PricedMorph
 
 __all__ = [
-    "BYPASS", "COMPACTION", "MorphCost", "MorphError", "MorphPlan",
-    "pack_layout", "plan_bypass", "plan_compaction",
+    "BYPASS", "COMPACTION", "SCALE_DOWN", "SCALE_UP", "MorphCost",
+    "MorphError", "MorphPlan", "pack_layout", "plan_bypass",
+    "plan_compaction", "plan_scale_down", "plan_scale_up",
     "MorphReport", "apply_plan", "check_conservation", "execute",
     "MorphConfig", "MorphPolicy", "PricedMorph",
 ]

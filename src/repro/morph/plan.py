@@ -37,6 +37,8 @@ from repro.core.scheduler import Schedule, transfer_schedule
 #: plan kinds
 COMPACTION = "compaction"
 BYPASS = "bypass"
+SCALE_UP = "scale_up"
+SCALE_DOWN = "scale_down"
 
 
 class MorphError(RuntimeError):
@@ -116,20 +118,49 @@ class MorphPlan:
                 raise MorphError(f"{self.tenant}: bypass invented chips")
             if len(new) > len(old):
                 raise MorphError(f"{self.tenant}: bypass grew the slice")
+        if self.kind == SCALE_UP:
+            if not old <= new:
+                raise MorphError(
+                    f"{self.tenant}: scale-up dropped chips {sorted(old - new)}")
+            if len(new) <= len(old):
+                raise MorphError(f"{self.tenant}: scale-up did not grow the slice")
+        if self.kind == SCALE_DOWN:
+            if not new <= old:
+                raise MorphError(
+                    f"{self.tenant}: scale-down invented chips {sorted(new - old)}")
+            if len(new) >= len(old):
+                raise MorphError(
+                    f"{self.tenant}: scale-down did not shrink the slice")
         dsts = [d for _, d in self.moves]
-        if len(set(dsts)) != len(dsts):
-            raise MorphError(f"{self.tenant}: chip receives two state copies")
-        if set(dsts) != entering:
-            raise MorphError(
-                f"{self.tenant}: state-never-lost violated — entering chips "
-                f"{sorted(entering)} vs move destinations {sorted(set(dsts))}")
         survivors = old & new
+        if self.kind == SCALE_DOWN:
+            # drains, not replays: every leaving chip may hand its in-flight
+            # state to a surviving chip (a survivor can absorb several drains
+            # across waves, so destination uniqueness is per-wave only —
+            # checked with the endpoint-disjointness below)
+            srcs = {s for s, _ in self.moves}
+            if not srcs <= old - new:
+                raise MorphError(
+                    f"{self.tenant}: drain sources {sorted(srcs - (old - new))} "
+                    "are not leaving the slice")
+            bad = sorted({d for d in dsts if d not in survivors})
+            if bad:
+                raise MorphError(
+                    f"{self.tenant}: drain destinations {bad} leave the slice")
+        else:
+            if len(set(dsts)) != len(dsts):
+                raise MorphError(f"{self.tenant}: chip receives two state copies")
+            if set(dsts) != entering:
+                raise MorphError(
+                    f"{self.tenant}: state-never-lost violated — entering chips "
+                    f"{sorted(entering)} vs move destinations {sorted(set(dsts))}")
         for s, d in self.moves:
             if self.kind == COMPACTION and s not in old:
                 raise MorphError(f"{self.tenant}: move source {s} holds no state")
-            if self.kind == BYPASS and s not in survivors:
+            if self.kind in (BYPASS, SCALE_UP) and s not in survivors:
                 raise MorphError(
-                    f"{self.tenant}: bypass source {s} is not a surviving peer")
+                    f"{self.tenant}: {self.kind} source {s} is not a "
+                    "surviving peer")
         if self.kind == COMPACTION:
             # a compaction move relocates a chip's own shard
             srcs = {s for s, _ in self.moves}
@@ -278,6 +309,36 @@ def _wave_split(moves: Sequence[tuple[int, int]],
     return waves
 
 
+def _replacements(anchors: Sequence[int], pool: Sequence[int], want: int,
+                  tiles_per_server: int,
+                  chips_per_rack: Optional[int]) -> list[int]:
+    """Pick ``want`` free chips from ``pool`` to graft onto a slice whose
+    live chips are ``anchors``: the anchors' own servers first, then their
+    racks on a pod, densest free server as the fallback — shared by the
+    failure-bypass and scale-up planners."""
+    anchor_servers = {c // tiles_per_server for c in anchors}
+    anchor_racks = ({c // chips_per_rack for c in anchors}
+                    if chips_per_rack is not None else set())
+
+    def _rack_of_server(s: int) -> int:
+        return (s * tiles_per_server) // chips_per_rack if chips_per_rack else 0
+
+    by_server: dict[int, list[int]] = {}
+    for c in pool:
+        by_server.setdefault(c // tiles_per_server, []).append(c)
+    order = sorted(by_server, key=lambda s: (
+        s not in anchor_servers,
+        chips_per_rack is not None and _rack_of_server(s) not in anchor_racks,
+        -len(by_server[s]), s))
+    picked: list[int] = []
+    for srv in order:
+        room = want - len(picked)
+        if room <= 0:
+            break
+        picked.extend(sorted(by_server[srv])[:room])
+    return picked
+
+
 # ---------------------------------------------------------------------------
 # Planners
 # ---------------------------------------------------------------------------
@@ -339,29 +400,9 @@ def plan_bypass(tenant: str, chips: Sequence[int], dead: Sequence[int],
     pool = sorted(set(free) - set(dead) - set(old))
     if not survivors:
         return None
-    # replacements: pack next to the survivors (their servers first, then
-    # their racks on a pod, densest free server as the fallback)
-    surv_servers = {c // tiles_per_server for c in survivors}
-    surv_racks = ({c // chips_per_rack for c in survivors}
-                  if chips_per_rack is not None else set())
-
-    def _rack_of_server(s: int) -> int:
-        return (s * tiles_per_server) // chips_per_rack if chips_per_rack else 0
-
-    by_server: dict[int, list[int]] = {}
-    for c in pool:
-        by_server.setdefault(c // tiles_per_server, []).append(c)
-    order = sorted(by_server, key=lambda s: (
-        s not in surv_servers,
-        chips_per_rack is not None and _rack_of_server(s) not in surv_racks,
-        -len(by_server[s]), s))
     want = min(len(lost), len(pool))  # partial when the pool is short
-    replacements: list[int] = []
-    for srv in order:
-        room = want - len(replacements)
-        if room <= 0:
-            break
-        replacements.extend(sorted(by_server[srv])[:room])
+    replacements = _replacements(survivors, pool, want, tiles_per_server,
+                                 chips_per_rack)
     # each replacement replays state from a distinct surviving peer; more
     # dead chips than survivors → extra waves reuse peers sequentially
     moves = [(survivors[i % len(survivors)], r)
@@ -374,5 +415,76 @@ def plan_bypass(tenant: str, chips: Sequence[int], dead: Sequence[int],
                      new_chips=tuple(sorted(survivors + replacements)),
                      moves=tuple(moves), state_bytes=state_bytes,
                      schedule=sched)
+    plan.validate(rack)
+    return plan
+
+
+def plan_scale_up(tenant: str, chips: Sequence[int], free: Sequence[int],
+                  n_new: int, tiles_per_server: int, state_bytes: float,
+                  rack: Optional[LumorphRack] = None,
+                  chips_per_rack: Optional[int] = None) -> Optional[MorphPlan]:
+    """Plan growing ``tenant``'s live slice by ``n_new`` free chips
+    (serving autoscale: adding prefill/decode replicas under traffic).
+
+    Entering chips are packed next to the slice (same servers, then same
+    racks, then densest free server — the bypass search).  Each entering
+    chip receives its replica shard from an existing holder, round-robin
+    over the old slice so the replays spread across source chips and the
+    waves stay wide.  Returns ``None`` when the pool cannot supply all
+    ``n_new`` chips — a partial grow would leave a ragged replica, so the
+    caller retries with fewer replicas instead."""
+    old = tuple(sorted(chips))
+    pool = sorted(set(free) - set(old))
+    if n_new <= 0 or not old or len(pool) < n_new:
+        return None
+    entering = sorted(_replacements(old, pool, n_new, tiles_per_server,
+                                    chips_per_rack))
+    if len(entering) < n_new:
+        return None
+    moves = [(old[i % len(old)], e) for i, e in enumerate(entering)]
+    sched = transfer_schedule(_wave_split(moves, rack), state_bytes,
+                              tag="morph-scale-up")
+    plan = MorphPlan(tenant=tenant, kind=SCALE_UP, old_chips=old,
+                     new_chips=tuple(sorted(old + tuple(entering))),
+                     moves=tuple(moves), state_bytes=state_bytes,
+                     schedule=sched)
+    plan.validate(rack)
+    return plan
+
+
+def plan_scale_down(tenant: str, chips: Sequence[int], keep: Sequence[int],
+                    tiles_per_server: int, drain_bytes: float,
+                    rack: Optional[LumorphRack] = None,
+                    chips_per_rack: Optional[int] = None) -> Optional[MorphPlan]:
+    """Plan shrinking ``tenant``'s live slice to exactly ``keep`` (serving
+    autoscale: releasing replicas back to the pool when traffic ebbs).
+
+    Each leaving chip *drains* its in-flight state (KV cache of the
+    requests it is still serving) to a surviving chip — same-server
+    destinations first, then same-rack — so no request is dropped by the
+    shrink.  Survivors may absorb several drains; the wave split keeps
+    every wave endpoint-disjoint.  Returns ``None`` when ``keep`` is not
+    a strict non-empty subset of the current slice."""
+    old = tuple(sorted(chips))
+    new = tuple(sorted(keep))
+    if not new or set(new) == set(old) or not set(new) < set(old):
+        return None
+    leaving = sorted(set(old) - set(new))
+    survivors = list(new)
+    moves: list[tuple[int, int]] = []
+    for i, src in enumerate(leaving):
+        srv = src // tiles_per_server
+        cands = [d for d in survivors if d // tiles_per_server == srv]
+        if not cands and chips_per_rack is not None:
+            rk = src // chips_per_rack
+            cands = [d for d in survivors if d // chips_per_rack == rk]
+        if not cands:
+            cands = survivors
+        moves.append((src, cands[i % len(cands)]))
+    sched = transfer_schedule(_wave_split(moves, rack), drain_bytes,
+                              tag="morph-scale-down")
+    plan = MorphPlan(tenant=tenant, kind=SCALE_DOWN, old_chips=old,
+                     new_chips=new, moves=tuple(moves),
+                     state_bytes=drain_bytes, schedule=sched)
     plan.validate(rack)
     return plan

@@ -27,7 +27,7 @@ from repro.core.pricing import SchedulePricer
 from repro.core.scheduler import (build_any_schedule, candidate_algos,
                                   order_for_locality)
 from repro.morph.plan import (MorphCost, MorphPlan, plan_bypass,
-                              plan_compaction)
+                              plan_compaction, plan_scale_down, plan_scale_up)
 
 #: price one algorithm on one concrete, ordered chip tuple
 PriceFn = Callable[[str, tuple[int, ...], float], float]
@@ -176,5 +176,46 @@ class MorphPolicy:
             return None
         old_s = self.step_cost(plan.old_chips, width, coll_bytes)
         new_s = self.step_cost(plan.new_chips, width, coll_bytes)
+        return PricedMorph(plan=plan, cost=plan.cost(self.link, rack=self.rack),
+                           old_step_s=old_s, new_step_s=new_s)
+
+    def propose_scale_up(self, tenant: str, chips: Sequence[int], n_new: int,
+                         state_bytes: float, free: Sequence[int],
+                         whatif_bytes: Optional[float] = None,
+                         ) -> Optional[PricedMorph]:
+        """Endorse growing a serving slice by ``n_new`` chips iff the pool
+        can supply them *and* the grown layout admits a collective — the
+        what-if admission test: the candidate layout is priced through the
+        shared :class:`~repro.core.pricing.SchedulePricer` before any chip
+        moves, so an autoscaler never grows into a layout the fabric
+        cannot serve."""
+        plan = plan_scale_up(tenant, chips, free, n_new, self.tiles_per_server,
+                             state_bytes, rack=self.rack,
+                             chips_per_rack=self.chips_per_rack)
+        if plan is None:
+            return None
+        b = whatif_bytes if whatif_bytes is not None else state_bytes
+        old_s = self.step_cost(plan.old_chips, len(plan.old_chips), b)
+        new_s = self.step_cost(plan.new_chips, len(plan.new_chips), b)
+        if new_s == float("inf"):
+            return None  # no admissible collective on the grown layout
+        return PricedMorph(plan=plan, cost=plan.cost(self.link, rack=self.rack),
+                           old_step_s=old_s, new_step_s=new_s)
+
+    def propose_scale_down(self, tenant: str, chips: Sequence[int],
+                           keep: Sequence[int], drain_bytes: float,
+                           whatif_bytes: Optional[float] = None,
+                           ) -> Optional[PricedMorph]:
+        """Endorse shrinking a serving slice to ``keep``: always worth it
+        when feasible (the freed chips return to the pool; the only price
+        is draining in-flight state off the leaving chips)."""
+        plan = plan_scale_down(tenant, chips, keep, self.tiles_per_server,
+                               drain_bytes, rack=self.rack,
+                               chips_per_rack=self.chips_per_rack)
+        if plan is None:
+            return None
+        b = whatif_bytes if whatif_bytes is not None else drain_bytes
+        old_s = self.step_cost(plan.old_chips, len(plan.old_chips), b)
+        new_s = self.step_cost(plan.new_chips, len(plan.new_chips), b)
         return PricedMorph(plan=plan, cost=plan.cost(self.link, rack=self.rack),
                            old_step_s=old_s, new_step_s=new_s)

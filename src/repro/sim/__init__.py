@@ -8,8 +8,9 @@ and occasionally lose chips to failures.
 
 Layers:
   * :mod:`repro.sim.workload` — job/failure traces: synthetic generators
-    (Poisson arrivals, heavy-tailed sizes, the paper's Fig 2a mix) and a
-    replayable JSONL trace format.
+    (Poisson arrivals, heavy-tailed sizes, the paper's Fig 2a mix),
+    serving specs (per-window request-load summaries for
+    :mod:`repro.serve`), and a replayable JSONL trace format.
   * :mod:`repro.sim.engine` — the discrete-event loop plus the three
     fabric *disciplines* (LUMORPH / torus / SiPAC) it compares.
   * :mod:`repro.sim.metrics` — acceptance, utilization, fragmentation,
@@ -20,12 +21,14 @@ from repro.sim.engine import (Discipline, RackSimulator, compare,
                               make_discipline, simulate)
 from repro.sim.metrics import SimMetrics, TenantRecord
 from repro.sim.workload import (CollectiveProfile, FailureSpec, JobSpec,
-                                Trace, fig2a_trace, pod_churn_trace,
-                                poisson_trace, strip_profiles, zoo_trace)
+                                LoadWindow, ServeSpec, Trace, fig2a_trace,
+                                pod_churn_trace, poisson_trace,
+                                strip_profiles, zoo_trace)
 
 __all__ = [
     "Discipline", "RackSimulator", "compare", "make_discipline", "simulate",
     "SimMetrics", "TenantRecord",
-    "CollectiveProfile", "FailureSpec", "JobSpec", "Trace", "fig2a_trace",
-    "pod_churn_trace", "poisson_trace", "strip_profiles", "zoo_trace",
+    "CollectiveProfile", "FailureSpec", "JobSpec", "LoadWindow", "ServeSpec",
+    "Trace", "fig2a_trace", "pod_churn_trace", "poisson_trace",
+    "strip_profiles", "zoo_trace",
 ]

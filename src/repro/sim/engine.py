@@ -60,14 +60,36 @@ from repro.core.fabric import LumorphRack
 from repro.core.pricing import SchedulePricer
 from repro.core.rack import Pod
 from repro.core.scheduler import (candidate_algos, order_for_locality,
-                                  transfer_tables_built)
+                                  transfer_schedule, transfer_tables_built)
 from repro.morph import MorphConfig, MorphPolicy, PricedMorph, apply_plan
 from repro.runtime.fault_tolerance import reallocate_after_failure
 from repro.sim.metrics import SimMetrics, TenantRecord
 from repro.sim.workload import FailureSpec, JobSpec, Trace
 
-# event-kind priorities for same-timestamp ordering
-_FAILURE, _DEPART, _ARRIVAL, _PHASE = 0, 1, 2, 3
+try:  # pragma: no cover - exercised whenever repro.sim is imported first
+    from repro.serve import tenant as serve_model
+    from repro.serve.autoscale import AutoscaleConfig, Autoscaler
+except ImportError:  # repro.serve is mid-import (it pulls repro.sim.workload,
+    # whose package init lands back here); resolve the names on first use
+    serve_model = None
+    AutoscaleConfig = Autoscaler = None
+
+
+def _serve_imports():
+    """Late binding for the engine ↔ serve cycle: whichever package is
+    imported first, the names are resolved by the time any serving event
+    actually runs (no serve job can exist before both packages loaded)."""
+    global serve_model, AutoscaleConfig, Autoscaler
+    if serve_model is None:
+        from repro.serve import tenant
+        from repro.serve.autoscale import AutoscaleConfig as AC
+        from repro.serve.autoscale import Autoscaler as A
+        serve_model = tenant
+        AutoscaleConfig, Autoscaler = AC, A
+
+# event-kind priorities for same-timestamp ordering (_WINDOW after _PHASE:
+# a serving window closes only once same-instant training phases settled)
+_FAILURE, _DEPART, _ARRIVAL, _PHASE, _WINDOW = 0, 1, 2, 3, 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,12 +150,56 @@ class _Job:
     #: the job by cancelling (epoch bump) and re-pushing it shifted
     pending: Optional[tuple[int, float]] = None
 
+    is_serve = False
+
     @property
     def width(self) -> int:
         """Collective participant count: the tenant's data-parallel width.
         Overallocated chips (torus padding) don't join the ALLREDUCE; a
         shrunk slice uses everything it has left."""
         return min(self.spec.chips, len(self.chips))
+
+
+@dataclasses.dataclass
+class _ServeJob:
+    """A serving tenant (``spec.serve`` set): no training steps — the job
+    lives through its load windows, its slice grows/shrinks live under
+    the autoscaler, and it departs after the last window."""
+
+    spec: JobSpec
+    rec: TenantRecord
+    chips: tuple[int, ...]
+    anchor: float  # arrival time the windows' relative starts anchor to
+    widx: int = 0  # next window to close
+    alive: bool = True
+    epoch: int = 0
+    #: memoized locality-ordered chips (replica groups are its g-blocks)
+    ordered: Optional[tuple[int, ...]] = None
+    #: memoized layout-dependent prices (TP stream, KV handoff affine)
+    prices: Optional[serve_model.SlicePrices] = None
+    pending: Optional[tuple[int, float]] = None
+    #: serving time lost to morphs/reconfigs since the last window closed —
+    #: charged against the next window's capacity, then reset
+    penalty_s: float = 0.0
+    #: consecutive calm windows (the autoscaler's shrink hysteresis)
+    calm_windows: int = 0
+    #: previous window's utilization (the autoscaler's rising-ramp guard)
+    prev_rho: Optional[float] = None
+    #: replica count that utilization was measured against
+    prev_n: int = 0
+    #: fluid prefill backlog carried into the next window (requests)
+    queue_carry: float = 0.0
+
+    is_serve = True
+
+    @property
+    def width(self) -> int:
+        """Every held chip serves (no overallocation padding)."""
+        return len(self.chips)
+
+    @property
+    def granularity(self) -> int:
+        return serve_model.granularity(self.spec.profile)
 
 
 class RackSimulator:
@@ -151,7 +217,8 @@ class RackSimulator:
                  morph: "MorphConfig | bool | None" = None,
                  n_racks: int = 1,
                  rails_per_rack_pair: Optional[int] = None,
-                 span_racks: bool = True):
+                 span_racks: bool = True,
+                 serve_autoscale: "AutoscaleConfig | bool | None" = None):
         if isinstance(discipline, str):
             discipline = make_discipline(discipline)
         self.discipline = discipline
@@ -224,6 +291,24 @@ class RackSimulator:
                                      tiles_per_server=tiles_per_server,
                                      pricer=self.pricer,
                                      chips_per_rack=self.chips_per_rack)
+        #: SLO-driven serving autoscaler (repro.serve.autoscale): a fabric
+        #: capability like morphing — ignored on electrical disciplines.
+        #: Its scale morphs go through a MorphPolicy of their own when the
+        #: trace-level ``morph`` flag is off, so enabling autoscaling never
+        #: changes training tenants' compaction/bypass behavior.
+        self._autoscaler: Optional[Autoscaler] = None
+        self._scale_policy: Optional[MorphPolicy] = None
+        if serve_autoscale and self.discipline.photonic:
+            _serve_imports()
+            acfg = (serve_autoscale if isinstance(serve_autoscale,
+                                                  AutoscaleConfig)
+                    else AutoscaleConfig())
+            self._autoscaler = Autoscaler(acfg)
+            self._scale_policy = self.morph or MorphPolicy(
+                MorphConfig(), rack=self.rack, link=self.discipline.link,
+                algos=self.discipline.algos,
+                tiles_per_server=tiles_per_server, pricer=self.pricer,
+                chips_per_rack=self.chips_per_rack)
         self.now = 0.0
         self.dead: set[int] = set()
         #: chip-layout version: bumped by every handler that moves chips
@@ -236,7 +321,9 @@ class RackSimulator:
         self._agg: tuple[int, int, Optional[float], int] = (0, 0, None, 0)
         self._agg_version = -1
         self._check_version = -1
-        self._jobs: dict[str, _Job] = {}  # live (accepted, not departed)
+        #: live tenants (accepted, not departed): training _Jobs and
+        #: serving _ServeJobs share the dict (duck-typed on width/chips)
+        self._jobs: dict[str, "_Job | _ServeJob"] = {}
         self._heap: list[tuple[float, int, int, object]] = []
         self._seq = 0
         names = [j.tenant for j in trace.jobs]
@@ -450,12 +537,26 @@ class RackSimulator:
         rec = TenantRecord(tenant=spec.tenant, requested=spec.chips,
                            arrival=self.now, granted=len(alloc.chips))
         self.metrics.tenants[spec.tenant] = rec
-        job = _Job(spec=spec, rec=rec, chips=alloc.chips)
-        self._jobs[spec.tenant] = job
-        self._layout_version += 1
         # establish the slice's circuits: one MZI window on photonic
         # fabrics (the slower rail OCS window for rack-spanning slices)
         reconf = self._reconfig_window(alloc.chips)
+        if spec.serve is not None:
+            _serve_imports()
+            sjob = _ServeJob(spec=spec, rec=rec, chips=alloc.chips,
+                             anchor=self.now)
+            self._jobs[spec.tenant] = sjob
+            self._layout_version += 1
+            if reconf:
+                self.metrics.on_reconfig(rec, reconf)
+                sjob.penalty_s += reconf
+            w0 = spec.serve.windows[0]
+            # windows stay anchored to the arrival: traffic doesn't wait
+            # for the fabric — setup time is capacity lost to the window
+            self._push_job(self.now + w0.start + w0.duration, _WINDOW, sjob)
+            return
+        job = _Job(spec=spec, rec=rec, chips=alloc.chips)
+        self._jobs[spec.tenant] = job
+        self._layout_version += 1
         if reconf:
             self.metrics.on_reconfig(rec, reconf)
         self._push_job(self.now + reconf + spec.compute_s, _PHASE, job)
@@ -488,6 +589,203 @@ class RackSimulator:
         job.rec.end = self.now
         self.metrics.completed += 1
         self._maybe_compact()
+
+    # -- serving (repro.serve) -----------------------------------------------
+    def _slice_prices(self, job: _ServeJob,
+                      groups: Sequence[tuple[int, ...]]) -> serve_model.SlicePrices:
+        """Layout-dependent serving prices, recomputed on every re-slice:
+        the TP activation collective on the *worst* replica block (mirrors
+        ``_profile_cost_chips``; distinct canonical blocks collapse onto
+        shared pricer entries) and the prefill→decode KV handoff as a
+        two-point affine fit of a Schedule-IR transfer wave."""
+        prof = job.spec.profile
+        sv = job.spec.serve
+        g = len(groups[0])
+
+        def tp_price(n_bytes: float) -> float:
+            if g <= 1 or prof is None or not prof.tp_collectives:
+                return 0.0
+            if not self.discipline.photonic:
+                return min(cm.algorithm_cost(a, n_bytes, g,
+                                             self.discipline.link)
+                           for a in self.discipline.algos)
+            blocks: dict = {}
+            for blk in groups:
+                blocks.setdefault(self.pricer.cache_key_chips(blk), blk)
+            return max(self.pricer.cheapest(
+                candidate_algos(self.discipline.algos, blk,
+                                self.chips_per_rack), blk, n_bytes)
+                for blk in blocks.values())
+
+        tp_pf = tp_price(prof.tp_bytes) if prof is not None else 0.0
+        tp_dec = (tp_price(prof.tp_bytes * sv.decode_batch
+                           / serve_model.PROFILE_TOKENS)
+                  if prof is not None else 0.0)
+        kv_base = kv_slope = 0.0
+        if len(groups) >= 2 and sv.kv_bytes_per_token > 0:
+            # representative handoff pair: first (prefill-side) and last
+            # (decode-side) replica; Schedule cost is affine in bytes for
+            # a fixed layout, so two points pin the whole request range
+            pairs = list(zip(groups[0], groups[-1]))
+            rack = self.rack if self.discipline.photonic else None
+
+            def kv_cost(total_bytes: float) -> float:
+                sched = transfer_schedule([pairs], total_bytes / g,
+                                          tag="kv-handoff")
+                return sched.cost(self.discipline.link, rack=rack)
+
+            b0, b1 = float(1 << 20), float(4 << 20)
+            c0, c1 = kv_cost(b0), kv_cost(b1)
+            kv_slope = (c1 - c0) / (b1 - b0)
+            kv_base = c0 - kv_slope * b0
+        return serve_model.SlicePrices(tp_prefill_s=tp_pf, tp_decode_s=tp_dec,
+                                       kv_base_s=kv_base,
+                                       kv_per_byte_s=kv_slope)
+
+    def _serve_window_stats(self, job: _ServeJob, w) -> serve_model.WindowStats:
+        g = job.granularity
+        if job.ordered is None:
+            job.ordered = tuple(order_for_locality(
+                job.chips, self.tiles_per_server,
+                chips_per_rack=self.chips_per_rack))
+        n_rep = len(job.ordered) // g
+        groups = [job.ordered[i * g:(i + 1) * g] for i in range(max(1, n_rep))]
+        if job.prices is None:
+            job.prices = self._slice_prices(job, groups)
+        lost = job.penalty_s
+        if n_rep < 2:
+            # degenerate single-replica slice (post-failure floor): prefill
+            # and decode time-share the one replica at half capacity each
+            n_pf = n_dec = max(1, n_rep)
+            lost += w.duration / 2.0
+        else:
+            n_pf, n_dec = serve_model.split_slice(job.spec.serve,
+                                                  job.spec.profile, n_rep,
+                                                  job.prices)
+        stats = serve_model.window_stats(job.spec.serve, job.spec.profile, w,
+                                         n_pf, n_dec, job.prices, lost_s=lost,
+                                         q0=job.queue_carry)
+        job.queue_carry = stats.queue_carry
+        return stats
+
+    def _on_window(self, payload: "tuple[_ServeJob, int]") -> None:
+        """A load window just closed: score it on the chips that served
+        it, let the autoscaler resize for the next window, and schedule
+        the next window close (or the departure after the last one)."""
+        job, epoch = payload
+        if not job.alive or epoch != job.epoch:
+            return
+        sv = job.spec.serve
+        w = sv.windows[job.widx]
+        stats = self._serve_window_stats(job, w)
+        self.metrics.on_serve_window(job.rec, stats, len(job.chips),
+                                     w.duration)
+        job.penalty_s = 0.0
+        job.widx += 1
+        if job.widx >= len(sv.windows):
+            self._push_job(self.now, _DEPART, job)
+            return
+        if self._autoscaler is not None:
+            self._autoscale(job, stats)
+        nw = sv.windows[job.widx]
+        self._push_job(job.anchor + nw.start + nw.duration, _WINDOW, job)
+
+    def _autoscale(self, job: _ServeJob, stats: serve_model.WindowStats) -> None:
+        """Execute one autoscaler decision as a priced scale morph."""
+        g = job.granularity
+        n_rep = len(job.chips) // g
+        if n_rep < 1:
+            return
+        prev = job.prev_rho
+        if prev is not None and job.prev_n and job.prev_n != n_rep:
+            # the policy's trend guards compare *load*, and rho is load per
+            # replica: normalize across resizes, else every shrink reads as
+            # a rising ramp (same load, fewer replicas) and stalls the next
+            prev = prev * job.prev_n / n_rep
+        want, job.calm_windows = self._autoscaler.decide(
+            n_rep, stats, job.calm_windows, prev_rho=prev)
+        job.prev_rho = max(stats.rho_prefill, stats.rho_decode)
+        job.prev_n = n_rep
+        sv = job.spec.serve
+        prof = job.spec.profile
+        whatif = prof.tp_bytes if prof is not None and prof.tp_bytes \
+            else sv.weight_bytes
+        if want > n_rep:
+            free = sorted(self._morph_pool(job))
+            # whole replicas only: grow by as many as the pool can host
+            grow = min(want - n_rep, len(free) // g)
+            if grow < 1:
+                return
+            pm = self._scale_policy.propose_scale_up(
+                job.spec.tenant, job.chips, grow * g,
+                state_bytes=sv.weight_bytes, free=free, whatif_bytes=whatif)
+            if pm is not None:
+                self._commit_serve_morph(job, pm)
+        elif want < n_rep:
+            # shed the tail replicas in locality order: the packed prefix
+            # keeps its low-stride TP blocks intact
+            keep = job.ordered[:want * g]
+            prompt, output = serve_model.mean_lengths(sv)
+            drain = (sv.decode_batch * (prompt + output / 2.0)
+                     * sv.kv_bytes_per_token / g)
+            pm = self._scale_policy.propose_scale_down(
+                job.spec.tenant, job.chips, keep, drain_bytes=drain,
+                whatif_bytes=whatif)
+            if pm is not None:
+                self._commit_serve_morph(job, pm)
+
+    def _commit_serve_morph(self, job: _ServeJob, pm: PricedMorph) -> None:
+        """Apply a scale plan: chips change under the conservation proofs;
+        the windows keep their cadence (traffic is anchored to wall time),
+        so the morph's cost is charged as lost capacity to the next window
+        instead of pausing the event like a training morph."""
+        apply_plan(self.allocator, pm.plan, rack=self.rack,
+                   dead_chips=self._dead_outside_allocator())
+        job.chips = self.allocator.allocations[job.spec.tenant].chips
+        self._layout_version += 1
+        job.ordered = None
+        job.prices = None
+        job.penalty_s += pm.cost.total_s
+        self.metrics.on_morph(job.rec, pm.plan.kind, pm.cost.total_s,
+                              pm.cost.bytes_moved, pm.cost.reconfig_windows,
+                              pm.old_step_s, pm.new_step_s)
+
+    def _recover_serve(self, job: _ServeJob) -> None:
+        """Re-slice a serving tenant that lost chips to a failure: the
+        widest whole-replica slice the rack still admits, never below the
+        two-replica disaggregation floor; the autoscaler restores width
+        on later windows if traffic warrants it."""
+        g = job.granularity
+        surviving = sum(1 for c in job.chips if c not in self.dead)
+        want = (surviving // g) * g
+        alloc = None
+        while want >= 2 * g:
+            try:
+                alloc = self.allocator.allocate(job.spec.tenant, want)
+                break
+            except AllocationError:
+                want -= g
+        if alloc is None:
+            job.alive = False
+            del self._jobs[job.spec.tenant]
+            job.rec.evicted = True
+            job.rec.end = self.now
+            self.metrics.evicted += 1
+            return
+        assert job.pending is not None, "live serve job has no pending event"
+        prio, time = job.pending
+        job.chips = alloc.chips
+        job.ordered = None
+        job.prices = None
+        job.epoch += 1  # invalidate the window scheduled on the old slice
+        self.metrics.recoveries += 1
+        job.rec.shrunk_to = (len(alloc.chips)
+                             if len(alloc.chips) < job.spec.chips else None)
+        reconf = self._reconfig_window(alloc.chips)
+        if reconf:
+            self.metrics.on_reconfig(job.rec, reconf)
+            job.penalty_s += reconf
+        self._push_job(max(time, self.now), prio, job)
 
     # -- morphing ------------------------------------------------------------
     def _dead_outside_allocator(self) -> int:
@@ -536,7 +834,9 @@ class RackSimulator:
             return
         for tenant in sorted(self._jobs):
             job = self._jobs[tenant]
-            if not job.alive or job.width <= 1:
+            if not job.alive or job.is_serve or job.width <= 1:
+                # serving slices are resized by the autoscaler, not the
+                # compaction policy — their layout churn is SLO-driven
                 continue
             pm = self.morph.propose_compaction(
                 tenant, job.chips, job.width, job.spec.coll_bytes,
@@ -564,6 +864,11 @@ class RackSimulator:
                 lost = dead & set(job.chips)
                 if not job.alive or not lost:
                     continue
+                if job.is_serve:
+                    # serving tenants re-slice on replica boundaries via
+                    # _recover_serve below; a single-chip bypass would
+                    # leave a torn replica group
+                    continue
                 if job.step >= job.spec.steps:
                     # no work left — don't spend spare chips on a tenant
                     # that is about to depart; the elastic path below
@@ -578,6 +883,9 @@ class RackSimulator:
         for tenant in victims:
             job = self._jobs.get(tenant)
             if job is None or not job.alive:
+                continue
+            if job.is_serve:
+                self._recover_serve(job)
                 continue
             alloc = reallocate_after_failure(self.allocator, tenant,
                                              job.spec.chips)
@@ -618,7 +926,8 @@ class RackSimulator:
     # -- main loop -----------------------------------------------------------
     def run(self, max_events: Optional[int] = None) -> SimMetrics:
         handlers = {_ARRIVAL: self._on_arrival, _PHASE: self._on_phase,
-                    _DEPART: self._on_depart, _FAILURE: self._on_failure}
+                    _DEPART: self._on_depart, _FAILURE: self._on_failure,
+                    _WINDOW: self._on_window}
         while self._heap:
             if max_events is not None and self.metrics.events >= max_events:
                 break
@@ -649,21 +958,27 @@ def simulate(kind: str, trace: Trace, n_chips: int = 64,
              check_invariants: bool = True,
              morph: "MorphConfig | bool | None" = None,
              n_racks: int = 1, span_racks: bool = True,
-             rails_per_rack_pair: Optional[int] = None) -> SimMetrics:
+             rails_per_rack_pair: Optional[int] = None,
+             serve_autoscale: "AutoscaleConfig | bool | None" = None,
+             ) -> SimMetrics:
     """Convenience wrapper: replay ``trace`` on discipline ``kind``
     (``n_racks > 1`` simulates a pod of racks joined by photonic rails)."""
     return RackSimulator(kind, trace, n_chips=n_chips,
                          check_invariants=check_invariants, morph=morph,
                          n_racks=n_racks, span_racks=span_racks,
-                         rails_per_rack_pair=rails_per_rack_pair).run()
+                         rails_per_rack_pair=rails_per_rack_pair,
+                         serve_autoscale=serve_autoscale).run()
 
 
 def compare(trace: Trace, kinds: Sequence[str] = ("lumorph", "torus", "sipac"),
             n_chips: int = 64, check_invariants: bool = True,
             morph: "MorphConfig | bool | None" = None,
+            serve_autoscale: "AutoscaleConfig | bool | None" = None,
             ) -> dict[str, SimMetrics]:
     """Replay the same trace on every discipline (the Fig 2a experiment).
-    ``morph`` only affects photonic disciplines (it is a fabric capability)."""
+    ``morph`` and ``serve_autoscale`` only affect photonic disciplines
+    (both are fabric capabilities)."""
     return {k: simulate(k, trace, n_chips=n_chips,
-                        check_invariants=check_invariants, morph=morph)
+                        check_invariants=check_invariants, morph=morph,
+                        serve_autoscale=serve_autoscale)
             for k in kinds}

@@ -27,13 +27,23 @@ class TenantRecord:
     collective_s: float = 0.0  # total ALLREDUCE time across the job
     reconfig_windows: int = 0  # MZI reprogramming windows charged
     shrunk_to: Optional[int] = None  # width after a shrinking recovery
-    morphs: int = 0  # live transformations (compactions + bypasses)
+    morphs: int = 0  # live transformations (compactions + bypasses + scales)
     morph_s: float = 0.0  # pause time charged to this tenant for morphing
     bypassed: int = 0  # failures absorbed by bypass instead of restart
+    # serving tenants (repro.serve) — zero for training tenants
+    serve_requests: int = 0  # offered requests across the tenant's windows
+    serve_slo_ok: float = 0.0  # of those, how many met both SLOs (analytic)
+    scale_ups: int = 0  # autoscaler grow morphs committed
+    scale_downs: int = 0  # autoscaler shrink morphs committed
 
     @property
     def jct(self) -> Optional[float]:
         return None if self.end is None else self.end - self.arrival
+
+    @property
+    def slo_attainment(self) -> float:
+        return (self.serve_slo_ok / self.serve_requests
+                if self.serve_requests else 0.0)
 
 
 class SimMetrics:
@@ -90,6 +100,20 @@ class SimMetrics:
         self.schedules_built = 0  # Schedule IRs constructed (cache misses)
         self.candidates_pruned = 0  # candidates skipped by lower bounds
         self.transfers_materialized = 0  # must stay 0: pricing is shape-only
+        # serving (repro.serve) — kept out of summary() so the bit-exact
+        # golden fixtures stay pinned; read them via serve_summary()
+        self.serve_windows = 0
+        self.serve_requests = 0  # offered requests across all tenants
+        self.serve_slo_ok = 0.0  # of those, how many met both SLOs
+        self.serve_chip_seconds = 0.0  # ∫ serving-held chips dt (per window)
+        self.scale_ups = 0  # autoscaler grow morphs
+        self.scale_downs = 0  # autoscaler shrink morphs
+        self.kv_handoff_bytes = 0.0  # prefill→decode KV shipped
+        self.kv_handoff_s = 0.0  # KV handoff seconds summed over requests
+        #: per-window (requests, seconds) samples for weighted quantiles
+        self._ttft_p50: list[tuple[float, float]] = []
+        self._ttft_p99: list[tuple[float, float]] = []
+        self._tpot: list[tuple[float, float]] = []
         # per-tenant
         self.tenants: dict[str, TenantRecord] = {}
         self._collective_samples = 0
@@ -142,9 +166,36 @@ class SimMetrics:
             self.compactions += 1
             self.compaction_step_s_before += old_step_s
             self.compaction_step_s_after += new_step_s
-        else:
+        elif kind == "bypass":
             self.bypasses += 1
             rec.bypassed += 1
+        elif kind == "scale_up":
+            self.scale_ups += 1
+            rec.scale_ups += 1
+        elif kind == "scale_down":
+            self.scale_downs += 1
+            rec.scale_downs += 1
+        else:
+            raise ValueError(f"unknown morph kind {kind!r}")
+
+    def on_serve_window(self, rec: TenantRecord, stats, chips: int,
+                        duration: float) -> None:
+        """Account one finished load window: ``stats`` is a
+        :class:`repro.serve.tenant.WindowStats`; ``chips`` is the slice
+        size that served it (the chip-hour ledger the provisioning
+        comparison keys on)."""
+        self.serve_windows += 1
+        self.serve_requests += stats.requests
+        self.serve_slo_ok += stats.slo_ok
+        self.serve_chip_seconds += chips * duration
+        self.kv_handoff_bytes += stats.kv_bytes
+        self.kv_handoff_s += stats.kv_s
+        if stats.requests:
+            self._ttft_p50.append((stats.requests, stats.ttft_p50_s))
+            self._ttft_p99.append((stats.requests, stats.ttft_p99_s))
+            self._tpot.append((stats.requests, stats.tpot_s))
+        rec.serve_requests += stats.requests
+        rec.serve_slo_ok += stats.slo_ok
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -199,6 +250,43 @@ class SimMetrics:
             "schedules_built": self.schedules_built,
             "candidates_pruned": self.candidates_pruned,
             "transfers_materialized": self.transfers_materialized,
+        }
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of all offered serving requests that met both SLOs."""
+        return (self.serve_slo_ok / self.serve_requests
+                if self.serve_requests else 0.0)
+
+    def serve_summary(self) -> dict:
+        """Serving metrics (repro.serve) — a separate method, like
+        :meth:`pricing_summary`, so :meth:`summary` and the golden trace
+        fixtures built on it stay byte-identical.  Latency percentiles
+        mix per-window analytic quantiles request-weighted: the p50 is
+        the weighted median of window p50s, the p99 the weighted 99th
+        percentile of window p99s — an upper-bound blend (a window's p99
+        stands in for its whole tail)."""
+        from repro.serve.metrics import (GOODPUT_PER_CHIP_S, SLO_ATTAINMENT,
+                                         TPOT_P50_S, TPOT_P99_S, TTFT_P50_S,
+                                         TTFT_P99_S, weighted_quantile)
+        goodput = (self.serve_slo_ok / self.serve_chip_seconds
+                   if self.serve_chip_seconds else 0.0)
+        return {
+            "serve_tenants": sum(1 for r in self.tenants.values()
+                                 if r.serve_requests),
+            "serve_windows": self.serve_windows,
+            "serve_requests": self.serve_requests,
+            SLO_ATTAINMENT: round(self.slo_attainment, 6),
+            TTFT_P50_S: round(weighted_quantile(self._ttft_p50, 0.50), 6),
+            TTFT_P99_S: round(weighted_quantile(self._ttft_p99, 0.99), 6),
+            TPOT_P50_S: round(weighted_quantile(self._tpot, 0.50), 9),
+            TPOT_P99_S: round(weighted_quantile(self._tpot, 0.99), 9),
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "serve_chip_seconds": round(self.serve_chip_seconds, 3),
+            GOODPUT_PER_CHIP_S: round(goodput, 9),
+            "kv_handoff_bytes": round(self.kv_handoff_bytes, 3),
+            "kv_handoff_s": round(self.kv_handoff_s, 9),
         }
 
     @property

@@ -101,6 +101,88 @@ class CollectiveProfile:
 
 
 @dataclasses.dataclass(frozen=True)
+class LoadWindow:
+    """Aggregated serving traffic over one time window.
+
+    Request-scale traffic (millions of arrivals) is summarized per
+    window — arrival count plus the mean prompt/output token mix — so
+    the event engine processes one event per window instead of one per
+    request while the analytic queueing model in
+    :mod:`repro.serve.tenant` still sees the full offered load.
+    """
+
+    start: float  # s, relative to the tenant's arrival
+    duration: float  # s
+    requests: int  # arrivals in the window (may be millions)
+    prompt_tokens: float  # mean prompt length
+    output_tokens: float  # mean generated length
+
+    @property
+    def rate(self) -> float:
+        """Offered request rate (req/s) over the window."""
+        return self.requests / self.duration if self.duration > 0 else 0.0
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "LoadWindow":
+        return cls(start=float(rec["start"]), duration=float(rec["duration"]),
+                   requests=int(rec["requests"]),
+                   prompt_tokens=float(rec["prompt_tokens"]),
+                   output_tokens=float(rec["output_tokens"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """A serving tenant: offered load per window, SLO targets, and the
+    roofline constants its model needs to turn a slice of chips into
+    TTFT/TPOT numbers (see :mod:`repro.serve.tenant`).
+
+    The tenant's chips split into TP-group *replicas* (``profile.tp``
+    chips each), partitioned into **prefill** and **decode** slices —
+    prompt processing is compute-bound, token generation weight-read
+    bound, and the KV cache handoff between the two rides the photonic
+    fabric as a Schedule-IR transfer.
+    """
+
+    windows: tuple[LoadWindow, ...]
+    slo_ttft_s: float = 0.5  # per-request time-to-first-token target
+    slo_tpot_s: float = 0.05  # per-token decode-latency target
+    flops_per_token: float = 2e9  # 2 · active params (prefill roofline)
+    weight_bytes: float = 1e9  # per-TP-rank weight bytes (decode roofline)
+    kv_bytes_per_token: float = 1e5  # KV payload per token (handoff transfer)
+    decode_batch: int = 16  # concurrent decode streams per replica
+
+    def __post_init__(self):
+        object.__setattr__(self, "windows", tuple(self.windows))
+        if not self.windows:
+            raise ValueError("ServeSpec needs at least one LoadWindow")
+        if self.slo_ttft_s <= 0 or self.slo_tpot_s <= 0:
+            raise ValueError("SLO targets must be positive")
+        if self.decode_batch < 1:
+            raise ValueError("decode_batch must be ≥ 1")
+
+    @property
+    def horizon_s(self) -> float:
+        """Total serving lifetime (windows are contiguous)."""
+        last = self.windows[-1]
+        return last.start + last.duration
+
+    @property
+    def total_requests(self) -> int:
+        return sum(w.requests for w in self.windows)
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "ServeSpec":
+        return cls(
+            windows=tuple(LoadWindow.from_json(w) for w in rec["windows"]),
+            slo_ttft_s=float(rec.get("slo_ttft_s", 0.5)),
+            slo_tpot_s=float(rec.get("slo_tpot_s", 0.05)),
+            flops_per_token=float(rec.get("flops_per_token", 2e9)),
+            weight_bytes=float(rec.get("weight_bytes", 1e9)),
+            kv_bytes_per_token=float(rec.get("kv_bytes_per_token", 1e5)),
+            decode_batch=int(rec.get("decode_batch", 16)))
+
+
+@dataclasses.dataclass(frozen=True)
 class JobSpec:
     """One tenant's job: arrive, train ``steps`` steps, depart.
 
@@ -113,6 +195,14 @@ class JobSpec:
     JSONL stays byte-identical) replaces the single generic ALLREDUCE
     with the tenant's model-derived :class:`CollectiveProfile` — bucketed
     DP gradients over ``width // tp`` rings plus the TP activation stream.
+
+    ``serve`` (optional, serialized only when present) turns the tenant
+    into a *serving* tenant: instead of training steps it serves the
+    request traffic in ``serve.windows`` from prefill/decode slices and
+    departs after the last window; ``steps``/``compute_s``/``coll_bytes``
+    are ignored, ``chips`` is the initial slice size (the autoscaler may
+    grow or shrink it live).  ``profile`` supplies the TP degree and the
+    activation-collective stream.
     """
 
     tenant: str
@@ -122,6 +212,7 @@ class JobSpec:
     compute_s: float = 1.0  # compute time per step
     coll_bytes: float = float(4 << 20)  # ALLREDUCE bytes per step
     profile: Optional[CollectiveProfile] = None
+    serve: Optional[ServeSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +243,10 @@ class Trace:
                 # profile-free jobs serialize exactly as before the profile
                 # extension — old goldens and readers stay byte-identical
                 del rec["profile"]
+            if j.serve is None:
+                # same contract for the serving extension: training-only
+                # traces keep their pre-serve byte-identical form
+                del rec["serve"]
             lines.append(json.dumps({"type": "job", **rec}))
         for f in self.failures:
             lines.append(json.dumps({"type": "failure", "time": f.time,
@@ -172,7 +267,10 @@ class Trace:
                 prof = rec.pop("profile", None)
                 if prof is not None:
                     prof = CollectiveProfile.from_json(prof)
-                jobs.append(JobSpec(profile=prof, **rec))
+                serve = rec.pop("serve", None)
+                if serve is not None:
+                    serve = ServeSpec.from_json(serve)
+                jobs.append(JobSpec(profile=prof, serve=serve, **rec))
             elif kind == "failure":
                 failures.append(FailureSpec(rec["time"], tuple(rec["chips"])))
             else:

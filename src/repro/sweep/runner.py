@@ -33,14 +33,18 @@ import time
 from typing import Optional, Sequence
 
 from repro.core import cost_model as cm
+from repro.serve.requests import serve_trace
 from repro.sim.engine import RackSimulator
 from repro.sim.workload import (CollectiveProfile, Trace, fig2a_trace,
                                 poisson_trace, strip_profiles, zoo_trace)
 
 #: workload mixes a scenario may name; ``zoo`` prices every tenant by its
 #: model's derived CollectiveProfile, ``zoo-generic`` is the *same trace*
-#: with profiles stripped (the generic-ALLREDUCE control arm)
-WORKLOADS = ("poisson", "fig2a", "zoo", "zoo-generic")
+#: with profiles stripped (the generic-ALLREDUCE control arm), and the
+#: ``serve`` pair mixes request-scale inference tenants (diurnal or
+#: bursty traffic, repro.serve) with a training backdrop
+WORKLOADS = ("poisson", "fig2a", "zoo", "zoo-generic", "serve",
+             "serve-bursty")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +62,9 @@ class Scenario:
     n_jobs: int = 40
     arrival_rate: float = 0.5
     failure_rate: float = 0.02
+    #: SLO-driven serving autoscaler (repro.serve) — only meaningful for
+    #: the ``serve*`` workloads on a photonic discipline
+    autoscale: bool = False
 
     def __post_init__(self):
         if self.workload not in WORKLOADS:
@@ -70,6 +77,8 @@ class Scenario:
         tag = self.discipline
         if self.morph:
             tag += "+morph"
+        if self.autoscale:
+            tag += "+autoscale"
         if self.n_racks > 1 and not self.span_racks:
             tag += "+confined"
         return tag
@@ -84,7 +93,10 @@ class Scenario:
     @property
     def workload_class(self) -> str:
         """The axis claim_profiles_matter compares across: profiled
-        (``zoo``) vs generic traces (everything else)."""
+        (``zoo``) vs generic traces; serving scenarios report in their
+        own class (their SLO economics are not a training comparison)."""
+        if self.workload.startswith("serve"):
+            return "serving"
         return "profiled" if self.workload == "zoo" else "generic"
 
 
@@ -94,11 +106,14 @@ def sweep_grid(*, seeds: Sequence[int] = (0, 1, 2, 3),
                workloads: Sequence[str] = ("zoo", "zoo-generic"),
                morphs: Sequence[bool] = (False, True),
                span_racks: Sequence[bool] = (True,),
+               autoscales: Sequence[bool] = (False,),
                n_jobs: int = 40, arrival_rate: float = 0.5,
                failure_rate: float = 0.02) -> list[Scenario]:
     """The scenario cross product, with degenerate combos dropped:
-    morphing is a photonic-fabric capability (electrical duplicates are
-    skipped) and rack confinement needs a pod (``n_racks > 1``)."""
+    morphing and autoscaling are photonic-fabric capabilities (electrical
+    duplicates are skipped), rack confinement needs a pod
+    (``n_racks > 1``), and the autoscale axis only applies to the
+    ``serve*`` workloads."""
     photonic = {"lumorph"}  # electrical disciplines ignore morph entirely
     out = []
     for seed in seeds:
@@ -113,12 +128,18 @@ def sweep_grid(*, seeds: Sequence[int] = (0, 1, 2, 3),
                         for span in span_racks:
                             if not span and n_racks <= 1:
                                 continue
-                            out.append(Scenario(
-                                seed=seed, discipline=disc, n_chips=n_chips,
-                                n_racks=n_racks, span_racks=span, morph=morph,
-                                workload=wl, n_jobs=n_jobs,
-                                arrival_rate=arrival_rate,
-                                failure_rate=failure_rate))
+                            for auto in autoscales:
+                                if auto and (disc not in photonic
+                                             or not wl.startswith("serve")):
+                                    continue
+                                out.append(Scenario(
+                                    seed=seed, discipline=disc,
+                                    n_chips=n_chips, n_racks=n_racks,
+                                    span_racks=span, morph=morph,
+                                    workload=wl, n_jobs=n_jobs,
+                                    arrival_rate=arrival_rate,
+                                    failure_rate=failure_rate,
+                                    autoscale=auto))
     return out
 
 
@@ -134,6 +155,17 @@ def build_trace(s: Scenario,
     if s.workload == "fig2a":
         return fig2a_trace(s.n_jobs, n_chips=s.n_chips,
                            failure_rate=s.failure_rate, seed=s.seed)
+    if s.workload.startswith("serve"):
+        # request-scale serving tenants + a small Poisson training
+        # backdrop (the mixed-rack multi-tenancy story); specs derive
+        # from profiles alone, so spawn workers never need configs/
+        return serve_trace(
+            2, profiles,
+            pattern="bursty" if s.workload == "serve-bursty" else "diurnal",
+            horizon_s=1800.0, window_s=60.0, base_rate=s.arrival_rate * 4,
+            peak_rate=s.arrival_rate * 24, seed=s.seed,
+            train_jobs=max(0, s.n_jobs // 8),
+            train_arrival_rate=s.arrival_rate / 100.0)
     trace = zoo_trace(s.n_jobs, profiles, arrival_rate=s.arrival_rate,
                       n_chips=s.n_chips, failure_rate=s.failure_rate,
                       seed=s.seed)
@@ -156,7 +188,8 @@ def run_scenario(s: Scenario, profiles: Sequence[CollectiveProfile],
     t0 = time.perf_counter()
     sim = RackSimulator(s.discipline, trace, n_chips=s.n_chips,
                         morph=s.morph, n_racks=s.n_racks,
-                        span_racks=s.span_racks)
+                        span_racks=s.span_racks,
+                        serve_autoscale=s.autoscale)
     seeded = 0
     if warm is not None:
         seeded = sim.pricer.seed_entries(warm.get(s.fabric_sig, ()))
@@ -166,7 +199,7 @@ def run_scenario(s: Scenario, profiles: Sequence[CollectiveProfile],
         pool = dict(warm.get(s.fabric_sig, ()))
         pool.update(sim.pricer.export_entries(warm_limit))
         warm[s.fabric_sig] = list(pool.items())[-warm_limit:]
-    return {
+    rec = {
         "scenario": dataclasses.asdict(s),
         "policy": s.policy,
         "workload_class": s.workload_class,
@@ -175,6 +208,9 @@ def run_scenario(s: Scenario, profiles: Sequence[CollectiveProfile],
         # timing/debug channel: excluded from determinism comparisons
         "timing": {"wall_s": round(wall_s, 6), "warm_seeded": seeded},
     }
+    if s.workload.startswith("serve"):
+        rec["serve"] = metrics.serve_summary()
+    return rec
 
 
 # -- worker-process plumbing -------------------------------------------------

@@ -1,0 +1,397 @@
+"""`repro.serve`: arrival generators, the analytic tenant model (fluid
+backlog carryover included), the autoscaling policy, scale morph plans,
+engine integration, and the serde/metric compatibility guarantees the
+subsystem makes to the rest of the repo."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.morph import plan_scale_down, plan_scale_up
+from repro.serve import (AutoscaleConfig, Autoscaler, bursty_windows,
+                         diurnal_windows, required_replicas, serve_trace,
+                         serving_spec_from_profile, split_slice, window_stats)
+from repro.serve.tenant import SlicePrices, WindowStats
+from repro.sim import RackSimulator, Trace, fig2a_trace
+from repro.sim.workload import CollectiveProfile, LoadWindow, ServeSpec
+
+PROF = CollectiveProfile(
+    model="test-7b", tp=4, buckets=(64e6, 64e6, 64e6, 32e6),
+    algos=("ring",) * 4, tp_bytes=4096 * 2048 * 2.0, tp_collectives=128,
+    compute_scale=2.6)
+
+PRICES = SlicePrices(tp_prefill_s=1e-4, tp_decode_s=2e-5,
+                     kv_base_s=1e-5, kv_per_byte_s=1e-12)
+
+
+def _spec(rate=4.0, n=10, slo_ttft_s=3.0, slo_tpot_s=0.05, dur=60.0):
+    wins = tuple(LoadWindow(start=i * dur, duration=dur,
+                            requests=int(rate * dur), prompt_tokens=2048.0,
+                            output_tokens=256.0) for i in range(n))
+    return ServeSpec(windows=wins, slo_ttft_s=slo_ttft_s,
+                     slo_tpot_s=slo_tpot_s, flops_per_token=2.0 * 6.76e9,
+                     weight_bytes=2.24e8, kv_bytes_per_token=1e5,
+                     decode_batch=16)
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators
+# ---------------------------------------------------------------------------
+
+def test_diurnal_windows_deterministic_and_day_shaped():
+    kw = dict(horizon_s=3600.0, window_s=60.0, base_rate=2.0, peak_rate=20.0,
+              prompt_tokens=1024.0, output_tokens=128.0, seed=5)
+    a, b = diurnal_windows(**kw), diurnal_windows(**kw)
+    assert a == b
+    assert diurnal_windows(**{**kw, "seed": 6}) != a
+    # windows tile the horizon exactly
+    assert a[0].start == 0.0
+    assert a[-1].start + a[-1].duration == pytest.approx(3600.0)
+    assert all(x.start + x.duration == pytest.approx(y.start)
+               for x, y in zip(a, a[1:]))
+    # trough at the edges, peak mid-day (Poisson noise ≪ the 10× swing)
+    mid = len(a) // 2
+    assert a[mid].requests > 3 * max(a[0].requests, a[-1].requests, 1)
+
+
+def test_bursty_windows_ride_the_carrier():
+    kw = dict(horizon_s=3600.0, window_s=60.0, base_rate=4.0, peak_rate=16.0,
+              prompt_tokens=1024.0, output_tokens=128.0, seed=3,
+              burst_mult=2.0)
+    calm = bursty_windows(**kw, p_burst=0.0)
+    # with bursts disabled the process is the pure diurnal carrier
+    total = sum(w.requests for w in calm)
+    carrier_mean = (4.0 + 16.0) / 2.0
+    assert total == pytest.approx(carrier_mean * 3600.0, rel=0.1)
+    stormy = bursty_windows(**kw, p_burst=0.5, mean_burst_windows=4.0)
+    # a 2× multiplier most of the time raises the offered load well
+    # above the carrier — and never above burst_mult × carrier + noise
+    assert sum(w.requests for w in stormy) > 1.3 * total
+    assert bursty_windows(**kw, p_burst=0.5, mean_burst_windows=4.0) == stormy
+
+
+def test_bursty_bursts_ramp_over_one_window():
+    # flat carrier isolates the Markov chain: every transition from the
+    # calm rate must pass through the midpoint before the full multiplier
+    wins = bursty_windows(horizon_s=36000.0, window_s=60.0, base_rate=50.0,
+                          peak_rate=None, burst_mult=3.0, prompt_tokens=64.0,
+                          output_tokens=8.0, seed=11, p_burst=0.1,
+                          mean_burst_windows=5.0)
+
+    def level(w):  # classify by Poisson mean: 50 / 100 (ramp) / 150
+        return min((50.0, 100.0, 150.0), key=lambda m: abs(w.requests / 60.0 - m))
+
+    lv = [level(w) for w in wins]
+    assert 150.0 in lv  # bursts actually happened at this seed
+    for prev, cur in zip(lv, lv[1:]):
+        if cur == 150.0:
+            assert prev in (100.0, 150.0), "burst entered without a ramp"
+
+
+# ---------------------------------------------------------------------------
+# Spec derivation + serde
+# ---------------------------------------------------------------------------
+
+def test_serving_spec_from_profile_inverts_profile_derivation():
+    spec = serving_spec_from_profile(PROF, _spec().windows)
+    assert spec.flops_per_token == pytest.approx(
+        2.0 * (PROF.compute_scale ** 2) * 1e9)
+    assert spec.weight_bytes == pytest.approx(sum(PROF.buckets))
+    assert spec.kv_bytes_per_token > 0
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["diurnal", "bursty"]),
+       st.integers(1, 3), st.integers(0, 2))
+@settings(max_examples=15, deadline=None)
+def test_serve_trace_jsonl_roundtrip_lossless(seed, pattern, n_tenants,
+                                              train_jobs):
+    """Serving JobSpecs (windows, SLOs, KV layout, profile) survive
+    JSONL save/load exactly, mixed with training jobs or not."""
+    trace = serve_trace(n_tenants, [PROF], pattern=pattern, horizon_s=600.0,
+                        window_s=60.0, base_rate=2.0, peak_rate=8.0,
+                        seed=seed, train_jobs=train_jobs)
+    back = Trace.from_jsonl(trace.to_jsonl())
+    assert back == trace
+    assert back.to_jsonl() == trace.to_jsonl()
+
+
+def test_training_traces_keep_pre_serve_serialization():
+    """A trace without serving tenants must serialize with no ``serve``
+    key at all — the committed golden JSONL fixtures stay byte-valid."""
+    text = fig2a_trace(20, failure_rate=0.02, n_chips=64, seed=7).to_jsonl()
+    assert '"serve"' not in text
+    assert Trace.from_jsonl(text).to_jsonl() == text
+
+
+# ---------------------------------------------------------------------------
+# Tenant window model
+# ---------------------------------------------------------------------------
+
+def _stats(rate, n_pf, n_dec, q0=0.0, lost_s=0.0, spec=None):
+    spec = spec or _spec()
+    w = LoadWindow(start=0.0, duration=60.0, requests=int(rate * 60),
+                   prompt_tokens=2048.0, output_tokens=256.0)
+    return window_stats(spec, PROF, w, n_pf, n_dec, PRICES,
+                        lost_s=lost_s, q0=q0)
+
+
+def test_underloaded_window_attains_and_carries_nothing():
+    s = _stats(2.0, 4, 4)
+    assert s.rho_prefill < 0.7
+    assert s.slo_frac > 0.95
+    assert s.queue_carry == 0.0
+    assert s.served_frac == 1.0
+
+
+def test_overload_builds_backlog_and_compounds_across_windows():
+    first = _stats(40.0, 2, 16)
+    assert first.rho_prefill > 1.0
+    assert first.queue_carry > 0.0
+    assert 0.0 < first.slo_frac < 1.0  # onset from empty: partial credit
+    second = _stats(40.0, 2, 16, q0=first.queue_carry)
+    assert second.slo_frac < first.slo_frac  # sustained overload compounds
+    assert second.queue_carry > first.queue_carry
+
+
+def test_backlog_drains_when_capacity_returns():
+    jam = _stats(40.0, 2, 16)
+    relief = _stats(2.0, 8, 8, q0=jam.queue_carry)
+    assert relief.queue_carry < jam.queue_carry
+    assert relief.slo_frac > _stats(40.0, 2, 16, q0=jam.queue_carry).slo_frac
+
+
+def test_morph_loss_shrinks_capacity_and_is_reported():
+    clean = _stats(8.0, 6, 8)
+    lossy = _stats(8.0, 6, 8, lost_s=30.0)
+    assert lossy.capacity_frac == pytest.approx(0.5)
+    assert lossy.rho_prefill > clean.rho_prefill
+    assert lossy.slo_frac <= clean.slo_frac
+
+
+def test_tpot_slo_gates_attainment_entirely():
+    strict = _spec(slo_tpot_s=1e-9)
+    assert _stats(2.0, 4, 4, spec=strict).slo_frac == 0.0
+
+
+def test_required_replicas_monotone_in_rate_and_rho():
+    spec = _spec()
+    n = [required_replicas(spec, PROF, PRICES, rate=r) for r in (2, 8, 32)]
+    assert n[0] <= n[1] <= n[2] and n[2] > n[0]
+    lean = required_replicas(spec, PROF, PRICES, rate=8.0, rho_target=0.9)
+    safe = required_replicas(spec, PROF, PRICES, rate=8.0, rho_target=0.5)
+    assert lean <= safe
+
+
+def test_split_slice_keeps_both_pools_nonempty():
+    spec = _spec()
+    for n in (2, 3, 7, 16):
+        n_pf, n_dec = split_slice(spec, PROF, n, PRICES)
+        assert n_pf >= 1 and n_dec >= 1 and n_pf + n_dec == n
+    with pytest.raises(ValueError):
+        split_slice(spec, PROF, 1, PRICES)
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling policy
+# ---------------------------------------------------------------------------
+
+def _ws(rho, slo=1.0, cap=1.0):
+    return WindowStats(requests=100, served_frac=1.0, slo_frac=slo,
+                       ttft_p50_s=0.1, ttft_p99_s=0.5, tpot_s=0.01,
+                       rho_prefill=rho, rho_decode=rho / 2, queue_depth=0.0,
+                       kv_bytes=0.0, kv_s=0.0, capacity_frac=cap)
+
+
+def test_autoscaler_grows_immediately_on_overload():
+    pol = Autoscaler(AutoscaleConfig())
+    want, calm = pol.decide(4, _ws(1.4), 0)
+    assert want > 4 and calm == 0
+    # unbounded overload (no finite rho) still produces a bounded step
+    want, _ = pol.decide(4, _ws(float("inf")), 0)
+    assert 4 < want <= 4 + AutoscaleConfig().max_step_up
+
+
+def test_autoscaler_grows_on_slo_miss_but_not_at_trivial_load():
+    pol = Autoscaler(AutoscaleConfig())
+    want, _ = pol.decide(4, _ws(0.7, slo=0.5), 0)
+    assert want > 4
+    # a miss at ρ≈0 means the model is too slow, not the pool too small:
+    # growing would burn chips without fixing it (shedding the idle
+    # capacity, as here, is fine)
+    want, _ = pol.decide(4, _ws(0.1, slo=0.5), 0)
+    assert want <= 4
+
+
+def test_autoscaler_noise_spike_buys_one_replica_not_a_panic():
+    """A single jittery window (level jump, no sustained trend) must not
+    trigger a multiplicative overbuy — smoothing caps it at +1."""
+    pol = Autoscaler(AutoscaleConfig())
+    want, _ = pol.decide(10, _ws(0.92), 0, prev_rho=0.55)
+    assert want == 11
+
+
+def test_autoscaler_discounts_its_own_morph_cost():
+    """ρ measured over a morph-shortened window is inflated; the policy
+    reacts to load against *full* capacity."""
+    pol = Autoscaler(AutoscaleConfig())
+    want, _ = pol.decide(6, _ws(1.1, cap=0.6), 0, prev_rho=0.6)
+    assert want == 6  # 1.1 × 0.6 = 0.66: not overload at all
+
+
+def test_autoscaler_sheds_with_hysteresis_and_deadband():
+    cfg = AutoscaleConfig()
+    pol = Autoscaler(cfg)
+    # oversized slice, steady load: first calm window arms the counter
+    want, calm = pol.decide(10, _ws(0.4), 0, prev_rho=0.4)
+    assert (want, calm) == (10, 1)
+    want, calm = pol.decide(10, _ws(0.4), 1, prev_rho=0.4)
+    assert want < 10 and calm == 0
+    assert want >= max(cfg.min_replicas, 5)  # at most half per step
+    # small slice + tiny move: the ±1 deadband holds it
+    want, calm = pol.decide(3, _ws(0.45), 1, prev_rho=0.45)
+    assert (want, calm) == (3, 2)
+
+
+def test_autoscaler_deep_calm_sheds_without_waiting():
+    pol = Autoscaler(AutoscaleConfig())
+    want, calm = pol.decide(12, _ws(0.1), 0, prev_rho=0.15)
+    assert want < 12 and calm == 0
+
+
+def test_autoscaler_never_sheds_into_a_rising_ramp():
+    pol = Autoscaler(AutoscaleConfig())
+    want, calm = pol.decide(10, _ws(0.55), 1, prev_rho=0.35)
+    assert (want, calm) == (10, 0)
+
+
+def test_autoscaler_respects_floor_and_step_cap():
+    cfg = AutoscaleConfig(max_step_up=2)
+    pol = Autoscaler(cfg)
+    want, _ = pol.decide(2, _ws(5.0), 0)
+    assert want == 4  # +max_step_up
+    want, _ = pol.decide(2, _ws(0.01), 0, prev_rho=0.01)
+    assert want == 2  # never below the disaggregation floor
+
+
+# ---------------------------------------------------------------------------
+# Scale morph plans
+# ---------------------------------------------------------------------------
+
+def test_plan_scale_up_packs_and_conserves():
+    plan = plan_scale_up("t", chips=(0, 1, 2, 3), free=range(4, 16),
+                         n_new=4, tiles_per_server=8, state_bytes=1e6)
+    assert plan is not None
+    assert set(plan.old_chips) < set(plan.new_chips)
+    assert len(plan.new_chips) == 8
+    # entering chips fill the slice's own server first
+    assert set(plan.new_chips) == set(range(8))
+    srcs = {m[0] for m in plan.moves}
+    assert srcs <= set(plan.old_chips)  # state replays from holders
+
+
+def test_plan_scale_up_refuses_partial_growth():
+    assert plan_scale_up("t", chips=(0, 1), free=(2,), n_new=2,
+                         tiles_per_server=8, state_bytes=1e6) is None
+
+
+def test_plan_scale_down_drains_to_survivors():
+    plan = plan_scale_down("t", chips=tuple(range(8)), keep=(0, 1, 2, 3),
+                           tiles_per_server=8, drain_bytes=1e6)
+    assert plan is not None
+    assert plan.new_chips == (0, 1, 2, 3)
+    for src, dst in plan.moves:
+        assert src in range(4, 8) and dst in (0, 1, 2, 3)
+    # keep must be a strict non-empty subset
+    assert plan_scale_down("t", chips=(0, 1), keep=(0, 1),
+                           tiles_per_server=8, drain_bytes=1e6) is None
+    assert plan_scale_down("t", chips=(0, 1), keep=(),
+                           tiles_per_server=8, drain_bytes=1e6) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+def _serve_sim(pattern="bursty", autoscale=True, chips=None, **kw):
+    trace = serve_trace(2, [PROF], pattern=pattern, horizon_s=1200.0,
+                        window_s=60.0, base_rate=2.0, peak_rate=12.0,
+                        prompt_tokens=2048.0, output_tokens=256.0,
+                        slo_ttft_s=3.0, slo_tpot_s=0.05, seed=1,
+                        chips=chips, **kw)
+    return RackSimulator("lumorph", trace, n_chips=64,
+                         serve_autoscale=AutoscaleConfig() if autoscale
+                         else None)
+
+
+def test_engine_serves_trace_deterministically():
+    a = _serve_sim().run().serve_summary()
+    b = _serve_sim().run().serve_summary()
+    assert a == b
+    assert a["serve_windows"] == 40  # 2 tenants × 20 windows
+    assert a["serve_requests"] > 0
+    assert 0.0 < a["slo_attainment"] <= 1.0
+    assert a["serve_chip_seconds"] > 0
+
+
+def test_engine_autoscaler_morphs_and_ships_kv():
+    s = _serve_sim().run().serve_summary()
+    assert s["scale_ups"] > 0
+    assert s["scale_downs"] > 0
+    assert s["kv_handoff_bytes"] > 0
+    assert s["kv_handoff_s"] > 0
+
+
+def test_autoscaling_beats_static_floor_on_attainment():
+    """The floor-provisioned slice (2 replicas) cannot serve the peaks;
+    the autoscaler must turn that into attainment, not just morphs."""
+    auto = _serve_sim(autoscale=True).run().serve_summary()
+    static = _serve_sim(autoscale=False).run().serve_summary()
+    assert auto["slo_attainment"] > static["slo_attainment"]
+
+
+def test_serve_summary_uses_shared_metric_names():
+    from repro.serve import metrics as m
+    s = _serve_sim().run().serve_summary()
+    for key in (m.SLO_ATTAINMENT, m.TTFT_P50_S, m.TTFT_P99_S, m.TPOT_P50_S,
+                m.TPOT_P99_S, m.GOODPUT_PER_CHIP_S):
+        assert key in s, key
+    assert s[m.TTFT_P50_S] <= s[m.TTFT_P99_S]
+    assert s[m.TPOT_P50_S] <= s[m.TPOT_P99_S]
+
+
+def test_summary_key_set_untouched_by_serving():
+    """`summary()` feeds the byte-pinned golden fixtures: serving a trace
+    must not add, remove, or reorder its keys."""
+    plain = RackSimulator("lumorph",
+                          fig2a_trace(10, failure_rate=0.0, n_chips=64,
+                                      seed=2),
+                          n_chips=64).run().summary()
+    serving = _serve_sim().run().summary()
+    assert list(serving.keys()) == list(plain.keys())
+
+
+def test_mixed_training_and_serving_trace_runs_clean():
+    trace = serve_trace(1, [PROF], pattern="diurnal", horizon_s=600.0,
+                        window_s=60.0, base_rate=2.0, peak_rate=6.0,
+                        seed=4, train_jobs=3, train_steps=5, train_chips=8,
+                        train_arrival_rate=1.0 / 60.0)
+    m = RackSimulator("lumorph", trace, n_chips=64,
+                      serve_autoscale=AutoscaleConfig()).run()
+    s = m.serve_summary()
+    assert s["serve_tenants"] == 1
+    assert m.completed >= 1  # training jobs ran alongside
+    assert s["serve_requests"] > 0
+
+
+def test_fluid_carryover_threads_through_engine():
+    """An undersized static slice in a peaky pattern must show backlog
+    effects end-to-end: attainment strictly below the per-window optimum
+    of an oversized one."""
+    g = 4  # PROF.tp
+    small = _serve_sim(pattern="bursty", autoscale=False,
+                       chips=[2 * g, 2 * g]).run().serve_summary()
+    big = _serve_sim(pattern="bursty", autoscale=False,
+                     chips=[7 * g, 7 * g]).run().serve_summary()
+    assert small["slo_attainment"] < big["slo_attainment"]
+    assert math.isfinite(small["ttft_p99_s"])
