@@ -11,6 +11,9 @@ CSV rows for:
                              (SLO attainment + chip-seconds, both traces)
   * sim_pod                — pod-scale fabric: hierarchical collectives +
                              rack-spanning allocation vs flat/confined
+  * sim_policy             — placement-policy tournament (packing vs
+                             locality vs future-morph) + what-if planner
+                             consistency
   * bench_sim_scale        — planner latency (schedules priced/s, fast vs
                              eager) + simulator events/s at pod scale
   * bench_kernels          — Pallas kernels vs oracles
@@ -39,11 +42,12 @@ def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             bench_overlap, bench_sim_scale, bench_sweep,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_morph, sim_pod, sim_rack,
-                            sim_serve)
+                            fig4b_collectives, sim_morph, sim_pod,
+                            sim_policy, sim_rack, sim_serve)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
-            sim_rack, sim_morph, sim_serve, sim_pod, bench_sim_scale,
-            bench_sweep, bench_kernels, bench_collective_exec, bench_overlap]
+            sim_rack, sim_morph, sim_serve, sim_pod, sim_policy,
+            bench_sim_scale, bench_sweep, bench_kernels,
+            bench_collective_exec, bench_overlap]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
 

@@ -1,0 +1,182 @@
+"""Placement-policy tournament + what-if planner consistency.
+
+Drives the :mod:`repro.core.policy` framework end-to-end:
+
+  * **Tournament** — the PR 7 sweep substrate runs the zoo mix across
+    seeds × fabrics × morph settings, once per placement policy
+    (``packing`` — the legacy densest-server-first default — vs
+    ``locality`` and ``future-morph``), and the Pareto report compares
+    each non-default policy against its packing twin (same tag minus the
+    placement axis).
+  * **What-if consistency** — for 100+ replay scenarios (seeds ×
+    policies × fabrics, including a rack-confined pod), every allocation
+    request is first asked of ``RackSimulator.whatif`` and then
+    committed: the planner's verdict must match the allocator's
+    accept/reject, and an admitted verdict must predict the *exact* chip
+    set the allocator commits.
+
+Claims (PASS/FAIL rows, gated in CI):
+
+  * ``claim_policy_tournament`` — the best non-default policy beats
+    ``packing`` on ≥ 1 Pareto axis (goodput / JCT / fragmentation) at
+    equal-or-better acceptance on the zoo mix, AND the what-if planner's
+    admission verdicts match post-hoc committed placements on every
+    replay scenario.
+
+Set ``BENCH_POLICY_QUICK=1`` for the 2-policy configuration the fast CI
+job runs (same claim, smaller grid).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core.allocator import AllocationError
+from repro.sim.engine import RackSimulator
+from repro.sim.workload import zoo_trace
+from repro.sweep import default_profiles, pareto_report, run_sweep, sweep_grid
+
+#: non-default placements in the tournament (quick mode drops locality:
+#: two policies keep the fast job's wall time flat)
+PLACEMENTS_FULL = ("packing", "locality", "future-morph")
+PLACEMENTS_QUICK = ("packing", "future-morph")
+
+#: (n_chips, n_racks, span_racks) fabrics the what-if replay covers —
+#: the confined pod exercises the "fragmentation" verdict
+WHATIF_FABRICS = ((64, 1, True), (128, 2, True), (128, 2, False))
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_POLICY_QUICK"))
+
+
+def _tournament_grid(seed: int, quick: bool):
+    placements = PLACEMENTS_QUICK if quick else PLACEMENTS_FULL
+    return sweep_grid(
+        seeds=range(seed, seed + (2 if quick else 6)),
+        disciplines=("lumorph",),
+        fabrics=((64, 1),) if quick else ((64, 1), (128, 2)),
+        workloads=("zoo",),
+        morphs=(False,) if quick else (False, True),
+        placements=placements,
+        n_jobs=30 if quick else 40,
+        failure_rate=0.02)
+
+
+def _base_tag(tag: str) -> str:
+    """A policy tag with its placement axis removed → its packing twin."""
+    for pl in PLACEMENTS_FULL[1:]:
+        tag = tag.replace(f"+{pl}", "")
+    return tag
+
+
+def _tournament_wins(policies: dict) -> list[tuple[str, str]]:
+    """(policy, axis) pairs where a non-default policy beats its packing
+    twin on that axis at equal-or-better acceptance."""
+    wins = []
+    for tag, agg in policies.items():
+        base = _base_tag(tag)
+        if base == tag or base not in policies:
+            continue
+        ref = policies[base]
+        if agg["acceptance_rate"] < ref["acceptance_rate"]:
+            continue
+        if agg["goodput_chip_seconds"] > ref["goodput_chip_seconds"]:
+            wins.append((tag, "goodput"))
+        if agg["mean_jct_s"] < ref["mean_jct_s"]:
+            wins.append((tag, "jct"))
+        if agg["fragmentation_rejects"] < ref["fragmentation_rejects"]:
+            wins.append((tag, "fragmentation"))
+    return wins
+
+
+def _whatif_replay(seed: int, placement: str, n_chips: int, n_racks: int,
+                   span_racks: bool, profiles) -> tuple[int, int]:
+    """One replay scenario: stream the zoo mix's slice widths through a
+    live allocator, asking ``whatif`` before every commit.  Returns
+    (checks, mismatches)."""
+    trace = zoo_trace(24, profiles, n_chips=n_chips, seed=seed)
+    sim = RackSimulator("lumorph", trace, n_chips=n_chips, n_racks=n_racks,
+                        span_racks=span_racks, policy=placement)
+    alloc = sim.allocator
+    rng = np.random.RandomState(seed ^ 0x5EED)
+    live: list[str] = []
+    checks = mismatches = 0
+    for spec in trace.jobs:
+        # random departures keep the free pool's shape churning
+        while live and rng.random() < 0.4:
+            alloc.release(live.pop(int(rng.randint(len(live)))))
+        verdict = sim.whatif(spec.chips)
+        try:
+            committed = alloc.allocate(spec.tenant, spec.chips)
+        except AllocationError:
+            committed = None
+        checks += 1
+        if verdict.admitted != (committed is not None):
+            mismatches += 1
+        elif committed is not None:
+            live.append(spec.tenant)
+            if verdict.chips != committed.chips:
+                mismatches += 1
+            if not (verdict.stretch >= 1.0 or verdict.step_s == 0.0):
+                mismatches += 1  # a priced admission must report stretch
+    return checks, mismatches
+
+
+def run(seed: int = 0, jobs: int = 0) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+    quick = _quick()
+    profiles = default_profiles()
+    if not jobs:
+        jobs = max(1, min(4, os.cpu_count() or 1))
+
+    # -- tournament ----------------------------------------------------------
+    grid = _tournament_grid(seed, quick)
+    t0 = time.perf_counter()
+    results = run_sweep(grid, jobs=jobs, profiles=profiles)
+    wall = time.perf_counter() - t0
+    report = pareto_report(results)
+    policies = report["classes"]["profiled"]["policies"]
+    wins = _tournament_wins(policies)
+
+    per_scenario_us = wall / len(grid) * 1e6
+    lines.append(f"policy/scenarios,{per_scenario_us:.1f},{len(grid)}")
+    for tag in sorted(policies):
+        agg = policies[tag]
+        for key in ("acceptance_rate", "goodput_chip_seconds",
+                    "mean_jct_s", "fragmentation_rejects"):
+            lines.append(f"policy/{tag}/{key},,{agg[key]}")
+    win_s = "|".join(f"{t}:{a}" for t, a in wins) or "none"
+    lines.append(f"policy/tournament_wins,,{win_s}")
+
+    # -- what-if consistency -------------------------------------------------
+    placements = PLACEMENTS_QUICK if quick else PLACEMENTS_FULL
+    n_seeds = 4 if quick else 12
+    scenarios = checks = mismatches = 0
+    t0 = time.perf_counter()
+    for s in range(seed, seed + n_seeds):
+        for pl in placements:
+            for n_chips, n_racks, span in WHATIF_FABRICS:
+                c, m = _whatif_replay(s, pl, n_chips, n_racks, span,
+                                      profiles)
+                scenarios += 1
+                checks += c
+                mismatches += m
+    whatif_wall = time.perf_counter() - t0
+    lines.append(f"policy/whatif_scenarios,"
+                 f"{whatif_wall / scenarios * 1e6:.1f},{scenarios}")
+    lines.append(f"policy/whatif_checks,,{checks}")
+    lines.append(f"policy/whatif_mismatches,,{mismatches}")
+
+    ok = bool(wins) and mismatches == 0 and (quick or scenarios >= 100)
+    lines.append(f"policy/claim_policy_tournament,,"
+                 f"{'PASS' if ok else 'FAIL'}")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

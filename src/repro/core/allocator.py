@@ -25,6 +25,7 @@ import itertools
 import math
 from typing import Sequence
 
+from repro.core.policy import FabricGeometry, make_policy, pack_dense
 from repro.core.rack import group_by_rack
 
 
@@ -50,10 +51,21 @@ class BaseAllocator:
         self.n_chips = n_chips
         self.free: set[int] = set(range(n_chips))
         self.allocations: dict[str, Allocation] = {}
+        self.retired: set[int] = set()  # chips failed out of the pool
 
     # -- interface -----------------------------------------------------------
     def allocate(self, tenant: str, k: int) -> Allocation:
         raise NotImplementedError
+
+    def _check_request(self, tenant: str, k: int) -> None:
+        """Shared admission validation (every ``allocate`` calls this):
+        nonsense widths are a caller bug → ``ValueError``; capacity
+        shortfalls are a legitimate reject → ``AllocationError``."""
+        if k <= 0:
+            raise ValueError("k must be positive")
+        if k > len(self.free):
+            raise AllocationError(
+                f"{tenant}: want {k}, only {len(self.free)} chips free")
 
     def release(self, tenant: str) -> None:
         a = self.allocations.pop(tenant, None)
@@ -94,6 +106,7 @@ class BaseAllocator:
         """Mark chips dead; return tenants that lost capacity."""
         dead = set(chips)
         self.free -= dead
+        self.retired.update(c for c in dead if 0 <= c < self.n_chips)
         hit = []
         for t, a in list(self.allocations.items()):
             if dead & set(a.chips):
@@ -104,9 +117,14 @@ class BaseAllocator:
         return hit
 
     @property
+    def live_chips(self) -> int:
+        """Chips still in service (never-failed): the utilization base."""
+        return self.n_chips - len(self.retired)
+
+    @property
     def utilization(self) -> float:
         used = sum(len(a.chips) for a in self.allocations.values())
-        return used / self.n_chips if self.n_chips else 0.0
+        return used / self.live_chips if self.live_chips else 0.0
 
     def _commit(self, tenant: str, chips: Sequence[int], requested: int) -> Allocation:
         chips = tuple(sorted(chips))
@@ -118,34 +136,38 @@ class BaseAllocator:
 
 
 class LumorphAllocator(BaseAllocator):
-    """Fragmentation-free: any ``k`` free chips form a valid slice."""
+    """Fragmentation-free: any ``k`` free chips form a valid slice.
 
-    def __init__(self, n_chips: int, tiles_per_server: int = 8):
+    *Which* free chips a tenant gets is the :class:`PlacementPolicy`'s
+    call (``repro.core.policy``); the default ``packing`` policy is the
+    legacy densest-server-first heuristic, bit-identically.
+    """
+
+    def __init__(self, n_chips: int, tiles_per_server: int = 8,
+                 policy=None):
         super().__init__(n_chips)
         self.tiles_per_server = tiles_per_server
+        self.policy = make_policy(policy)
+
+    @property
+    def geometry(self) -> FabricGeometry:
+        return FabricGeometry(tiles_per_server=self.tiles_per_server)
 
     def _pack(self, candidates: Sequence[int], k: int) -> list[int]:
-        """Densest-server-first packing of ``k`` chips from ``candidates``:
-        minimizes the number of servers a tenant spans, conserving the
-        rack's inter-server fiber budget."""
-        by_server: dict[int, list[int]] = {}
-        for c in candidates:
-            by_server.setdefault(c // self.tiles_per_server, []).append(c)
-        order = sorted(by_server.values(), key=len, reverse=True)
-        picked: list[int] = []
-        for server_chips in order:
-            take = min(k - len(picked), len(server_chips))
-            picked.extend(sorted(server_chips)[:take])
-            if len(picked) == k:
-                break
-        return picked
+        """Densest-server-first packing (kept as a shim for callers; the
+        heuristic itself lives in ``repro.core.policy.pack_dense``)."""
+        return pack_dense(candidates, k, self.tiles_per_server)
+
+    def whatif(self, k: int, coll_bytes=None):
+        """What-if admission for a ``k``-chip tenant against the current
+        free pool — priced, not committed (``repro.core.policy``)."""
+        return self.policy.whatif(self.free, k, self.geometry, coll_bytes)
 
     def allocate(self, tenant: str, k: int) -> Allocation:
-        if k <= 0:
-            raise ValueError("k must be positive")
-        if k > len(self.free):
-            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
-        return self._commit(tenant, self._pack(self.free, k), k)
+        self._check_request(tenant, k)
+        chips = self.policy.place(self.free, k, self.geometry)
+        assert chips is not None, "fragmentation-free fabric rejected a fit"
+        return self._commit(tenant, chips, k)
 
 
 class PodAllocator(LumorphAllocator):
@@ -167,48 +189,29 @@ class PodAllocator(LumorphAllocator):
     """
 
     def __init__(self, n_chips: int, chips_per_rack: int,
-                 tiles_per_server: int = 8, span_racks: bool = True):
-        super().__init__(n_chips, tiles_per_server)
+                 tiles_per_server: int = 8, span_racks: bool = True,
+                 policy=None):
+        super().__init__(n_chips, tiles_per_server, policy=policy)
         if n_chips % chips_per_rack:
             raise ValueError(
                 f"n_chips {n_chips} not a multiple of chips_per_rack {chips_per_rack}")
         self.chips_per_rack = chips_per_rack
         self.span_racks = span_racks
 
+    @property
+    def geometry(self) -> FabricGeometry:
+        return FabricGeometry(tiles_per_server=self.tiles_per_server,
+                              chips_per_rack=self.chips_per_rack,
+                              span_racks=self.span_racks)
+
     def allocate(self, tenant: str, k: int) -> Allocation:
-        if k <= 0:
-            raise ValueError("k must be positive")
-        if k > len(self.free):
-            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} chips free")
-        by_rack = group_by_rack(self.free, self.chips_per_rack)
-        fits = [r for r, chips in by_rack.items() if len(chips) >= k]
-        if fits:  # rack-first: zero rail crossings, best-fit rack
-            rack = min(fits, key=lambda r: (len(by_rack[r]), r))
-            return self._commit(tenant, self._pack(by_rack[rack], k), k)
-        if not self.span_racks:
+        self._check_request(tenant, k)
+        chips = self.policy.place(self.free, k, self.geometry)
+        if chips is None:  # rack-confined pod: no single-rack fit
             raise AllocationError(
                 f"{tenant}: want {k}, no single rack has that many free "
                 f"(rack-confined pod)")
-        # span the minimal number of racks (most-free racks first)
-        racks = sorted(by_rack, key=lambda r: (-len(by_rack[r]), r))
-        span, have = [], 0
-        for r in racks:
-            span.append(r)
-            have += len(by_rack[r])
-            if have >= k:
-                break
-        share, rem = divmod(k, len(span))
-        if rem == 0 and all(len(by_rack[r]) >= share for r in span):
-            # equal shares: the hierarchical collective is admissible
-            picked = [c for r in span for c in self._pack(by_rack[r], share)]
-        else:  # uneven free pools: greedy fill, still minimal rack count
-            picked = []
-            for r in span:
-                take = min(k - len(picked), len(by_rack[r]))
-                picked.extend(self._pack(by_rack[r], take))
-                if len(picked) == k:
-                    break
-        return self._commit(tenant, picked, k)
+        return self._commit(tenant, chips, k)
 
 
 class TorusAllocator(BaseAllocator):
@@ -231,8 +234,7 @@ class TorusAllocator(BaseAllocator):
         return sorted(shapes, key=lambda s: (s[0] * s[1] * s[2], s))
 
     def allocate(self, tenant: str, k: int) -> Allocation:
-        if k > len(self.free):
-            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} free")
+        self._check_request(tenant, k)
         X, Y, Z = self.dims
         for (a, b, c) in self._boxes(k):
             for ox, oy, oz in itertools.product(range(X), range(Y), range(Z)):
@@ -260,8 +262,7 @@ class SipacAllocator(BaseAllocator):
             raise ValueError(f"n_chips {n_chips} not a multiple of group {self.group}")
 
     def allocate(self, tenant: str, k: int) -> Allocation:
-        if k > len(self.free):
-            raise AllocationError(f"{tenant}: want {k}, only {len(self.free)} free")
+        self._check_request(tenant, k)
         # round up to the nearest power of r, capped at the group size
         size = 1
         while size < min(k, self.group):

@@ -21,6 +21,8 @@ from repro.morph.plan import (BYPASS, COMPACTION, SCALE_DOWN, SCALE_UP,
                               MorphCost, MorphError, MorphPlan, pack_layout,
                               plan_bypass, plan_compaction, plan_scale_down,
                               plan_scale_up)
+from repro.core.policy import (FutureMorphObjective, LocalityObjective,
+                               MorphObjective)
 from repro.morph.policy import MorphConfig, MorphPolicy, PricedMorph
 
 __all__ = [
@@ -28,5 +30,6 @@ __all__ = [
     "MorphError", "MorphPlan", "pack_layout", "plan_bypass",
     "plan_compaction", "plan_scale_down", "plan_scale_up",
     "MorphReport", "apply_plan", "check_conservation", "execute",
-    "MorphConfig", "MorphPolicy", "PricedMorph",
+    "MorphConfig", "MorphObjective", "LocalityObjective",
+    "FutureMorphObjective", "MorphPolicy", "PricedMorph",
 ]

@@ -346,7 +346,8 @@ def _replacements(anchors: Sequence[int], pool: Sequence[int], want: int,
 def plan_compaction(tenant: str, chips: Sequence[int], free: Sequence[int],
                     tiles_per_server: int, state_bytes: float,
                     rack: Optional[LumorphRack] = None,
-                    chips_per_rack: Optional[int] = None) -> Optional[MorphPlan]:
+                    chips_per_rack: Optional[int] = None,
+                    target: Optional[Sequence[int]] = None) -> Optional[MorphPlan]:
     """Plan remapping ``tenant``'s slice toward the densest-server-first
     layout reachable from the current free pool.
 
@@ -354,10 +355,21 @@ def plan_compaction(tenant: str, chips: Sequence[int], free: Sequence[int],
     free pool allows (no moves, or the target does not reduce the spans
     pricing keys on — on a pod the rack span first, then the server
     span; same-rack remaps are preferred because cross-rack state moves
-    ride the slower rails)."""
-    target = pack_layout(chips, free, tiles_per_server,
-                         chips_per_rack=chips_per_rack)
+    ride the slower rails).
+
+    ``target`` overrides the default ``pack_layout`` destination — a
+    :class:`~repro.core.policy.MorphObjective` supplies alternates; an
+    invalid target (wrong width, or chips outside the tenant's slice and
+    the free pool) yields ``None`` rather than an unreachable plan."""
     old = tuple(sorted(chips))
+    if target is None:
+        target = pack_layout(chips, free, tiles_per_server,
+                             chips_per_rack=chips_per_rack)
+    else:
+        target = tuple(sorted(target))
+        if (len(target) != len(old) or len(set(target)) != len(target)
+                or not set(target) <= set(chips) | set(free)):
+            return None
     if target == old:
         return None
     span = (_rack_spans(target, chips_per_rack),

@@ -23,6 +23,7 @@ from typing import Callable, Optional, Sequence
 
 from repro.core.cost_model import LinkModel
 from repro.core.fabric import CircuitError, LumorphRack
+from repro.core.policy import MorphObjective
 from repro.core.pricing import SchedulePricer
 from repro.core.scheduler import (build_any_schedule, candidate_algos,
                                   order_for_locality)
@@ -80,12 +81,16 @@ class MorphPolicy:
                  tiles_per_server: int,
                  price: Optional[PriceFn] = None,
                  chips_per_rack: Optional[int] = None,
-                 pricer: Optional[SchedulePricer] = None):
+                 pricer: Optional[SchedulePricer] = None,
+                 objective: Optional[MorphObjective] = None):
         self.config = config
         self.rack = rack
         self.link = link
         self.algos = tuple(algos)
         self.tiles_per_server = tiles_per_server
+        #: ranks candidate compaction targets; the default objective is
+        #: the legacy behavior exactly (one pack_layout target)
+        self.objective = objective if objective is not None else MorphObjective()
         #: pod morphs: rack granularity for same-rack-preferring targets
         #: and hierarchical collective candidates (None = single rack)
         self.chips_per_rack = chips_per_rack
@@ -142,24 +147,40 @@ class MorphPolicy:
                            free: Sequence[int]) -> Optional[PricedMorph]:
         """Endorse a compaction iff it strictly lowers the tenant's
         per-step collective cost and (if amortizing) pays for itself over
-        the tenant's remaining steps."""
+        the tenant's remaining steps.  The objective may supply several
+        candidate targets; every candidate must pass the same strict-gain
+        and amortization gates, then the objective ranks the survivors."""
         if not self.config.compaction or remaining_steps <= 0:
             return None
-        plan = plan_compaction(tenant, chips, free, self.tiles_per_server,
-                               self._state_bytes(coll_bytes), rack=self.rack,
-                               chips_per_rack=self.chips_per_rack)
-        if plan is None:
-            return None
-        old_s = self.step_cost(plan.old_chips, width, coll_bytes)
-        new_s = self.step_cost(plan.new_chips, width, coll_bytes)
-        gain = old_s - new_s
-        if not (gain > self.config.min_gain_s and gain > 0.0):
-            return None
-        cost = plan.cost(self.link, rack=self.rack)
-        if self.config.amortize and gain * remaining_steps <= cost.total_s:
-            return None
-        return PricedMorph(plan=plan, cost=cost, old_step_s=old_s,
-                           new_step_s=new_s)
+        state_bytes = self._state_bytes(coll_bytes)
+        targets = self.objective.compaction_targets(
+            chips, free, self.tiles_per_server, self.chips_per_rack)
+        move_s = (self.link.alpha + self.link.reconfig
+                  + state_bytes / self.link.bw)
+        best: Optional[tuple[float, PricedMorph]] = None
+        for target in targets:
+            plan = plan_compaction(tenant, chips, free, self.tiles_per_server,
+                                   state_bytes, rack=self.rack,
+                                   chips_per_rack=self.chips_per_rack,
+                                   target=target)
+            if plan is None:
+                continue
+            old_s = self.step_cost(plan.old_chips, width, coll_bytes)
+            new_s = self.step_cost(plan.new_chips, width, coll_bytes)
+            gain = old_s - new_s
+            if not (gain > self.config.min_gain_s and gain > 0.0):
+                continue
+            cost = plan.cost(self.link, rack=self.rack)
+            if self.config.amortize and gain * remaining_steps <= cost.total_s:
+                continue
+            pm = PricedMorph(plan=plan, cost=cost, old_step_s=old_s,
+                             new_step_s=new_s)
+            free_after = (set(free) | set(plan.old_chips)) - set(plan.new_chips)
+            score = self.objective.score(pm, remaining_steps, free_after,
+                                         self.tiles_per_server, move_s)
+            if best is None or score < best[0]:
+                best = (score, pm)
+        return best[1] if best is not None else None
 
     def propose_bypass(self, tenant: str, chips: Sequence[int], width: int,
                        coll_bytes: float, dead: Sequence[int],
@@ -206,9 +227,11 @@ class MorphPolicy:
                            keep: Sequence[int], drain_bytes: float,
                            whatif_bytes: Optional[float] = None,
                            ) -> Optional[PricedMorph]:
-        """Endorse shrinking a serving slice to ``keep``: always worth it
-        when feasible (the freed chips return to the pool; the only price
-        is draining in-flight state off the leaving chips)."""
+        """Endorse shrinking a serving slice to ``keep``: worth it
+        whenever feasible (the freed chips return to the pool; the only
+        price is draining in-flight state off the leaving chips) — but
+        never onto a layout with no admissible collective, the same
+        what-if admission guard as :meth:`propose_scale_up`."""
         plan = plan_scale_down(tenant, chips, keep, self.tiles_per_server,
                                drain_bytes, rack=self.rack,
                                chips_per_rack=self.chips_per_rack)
@@ -217,5 +240,7 @@ class MorphPolicy:
         b = whatif_bytes if whatif_bytes is not None else drain_bytes
         old_s = self.step_cost(plan.old_chips, len(plan.old_chips), b)
         new_s = self.step_cost(plan.new_chips, len(plan.new_chips), b)
+        if new_s == float("inf"):
+            return None  # no admissible collective on the shrunk layout
         return PricedMorph(plan=plan, cost=plan.cost(self.link, rack=self.rack),
                            old_step_s=old_s, new_step_s=new_s)

@@ -57,6 +57,7 @@ from repro.core import cost_model as cm
 from repro.core.allocator import (AllocationError, BaseAllocator,
                                   PodAllocator, make_allocator)
 from repro.core.fabric import LumorphRack
+from repro.core.policy import Admission, PlacementPolicy, make_policy
 from repro.core.pricing import SchedulePricer
 from repro.core.rack import Pod
 from repro.core.scheduler import (candidate_algos, order_for_locality,
@@ -105,7 +106,11 @@ class Discipline:
     algos: tuple[str, ...]
     photonic: bool = False
 
-    def make_allocator(self, n_chips: int) -> BaseAllocator:
+    def make_allocator(self, n_chips: int,
+                       policy: "PlacementPolicy | str | None" = None,
+                       ) -> BaseAllocator:
+        if self.photonic:  # electrical slicing rules admit no policy choice
+            return make_allocator(self.name, n_chips, policy=policy)
         return make_allocator(self.name, n_chips)
 
 
@@ -218,13 +223,21 @@ class RackSimulator:
                  n_racks: int = 1,
                  rails_per_rack_pair: Optional[int] = None,
                  span_racks: bool = True,
-                 serve_autoscale: "AutoscaleConfig | bool | None" = None):
+                 serve_autoscale: "AutoscaleConfig | bool | None" = None,
+                 policy: "str | PlacementPolicy | None" = None):
         if isinstance(discipline, str):
             discipline = make_discipline(discipline)
         self.discipline = discipline
         self.trace = trace
         self.n_racks = n_racks
         self.span_racks = span_racks
+        #: placement policy (repro.core.policy): which free chips a tenant
+        #: gets.  A fabric capability like morphing — fixed electrical
+        #: disciplines place by their own slice rules, so a non-default
+        #: policy is ignored there and `compare` can pass one setting for
+        #: all disciplines.  Bound to the shared pricer below.
+        self.policy: PlacementPolicy = make_policy(
+            policy if discipline.photonic else None)
         #: pod mode (``n_racks > 1``): rack granularity of the chip space;
         #: None means the classic single-rack simulation
         self.chips_per_rack: Optional[int] = None
@@ -239,9 +252,10 @@ class RackSimulator:
             self.chips_per_rack = n_chips // n_racks
             self.allocator: BaseAllocator = PodAllocator(
                 n_chips, self.chips_per_rack, tiles_per_server,
-                span_racks=span_racks)
+                span_racks=span_racks, policy=self.policy)
         else:
-            self.allocator = discipline.make_allocator(n_chips)
+            self.allocator = discipline.make_allocator(n_chips,
+                                                       policy=self.policy)
         self.n_chips = self.allocator.n_chips  # torus may round the request
         self.metrics = SimMetrics(self.n_chips)
         self.check_invariants = check_invariants
@@ -277,6 +291,9 @@ class RackSimulator:
             tiles_per_server=tiles_per_server,
             chips_per_rack=self.chips_per_rack,
             cache_size=self.SCHED_CACHE_SIZE)
+        # the policy prices candidate placements through the same cache
+        # the engine prices steps from (identical minima, shared entries)
+        self.policy.bind(self.pricer, self.discipline.algos)
         self._transfer_tables_at_start = transfer_tables_built()
         #: online slice morphing (repro.morph): compaction on departure,
         #: bypass on failure.  Only meaningful on a reconfigurable photonic
@@ -290,7 +307,8 @@ class RackSimulator:
                                      algos=self.discipline.algos,
                                      tiles_per_server=tiles_per_server,
                                      pricer=self.pricer,
-                                     chips_per_rack=self.chips_per_rack)
+                                     chips_per_rack=self.chips_per_rack,
+                                     objective=self.policy.morph_objective())
         #: SLO-driven serving autoscaler (repro.serve.autoscale): a fabric
         #: capability like morphing — ignored on electrical disciplines.
         #: Its scale morphs go through a MorphPolicy of their own when the
@@ -308,7 +326,8 @@ class RackSimulator:
                 MorphConfig(), rack=self.rack, link=self.discipline.link,
                 algos=self.discipline.algos,
                 tiles_per_server=tiles_per_server, pricer=self.pricer,
-                chips_per_rack=self.chips_per_rack)
+                chips_per_rack=self.chips_per_rack,
+                objective=self.policy.morph_objective())
         self.now = 0.0
         self.dead: set[int] = set()
         #: chip-layout version: bumped by every handler that moves chips
@@ -951,7 +970,20 @@ class RackSimulator:
         self.metrics.candidates_pruned = st.pruned
         self.metrics.transfers_materialized = (
             transfer_tables_built() - self._transfer_tables_at_start)
+        self.metrics.retired_chips = len(self.allocator.retired)
         return self.metrics
+
+    # -- what-if capacity planning -------------------------------------------
+    def whatif(self, k: int, coll_bytes: Optional[float] = None) -> Admission:
+        """Can this fabric absorb a ``k``-chip tenant right now, without
+        evictions, and at what collective stretch?  Pure query: prices the
+        candidate placement through the shared pricer, commits nothing."""
+        if not self.discipline.photonic:
+            raise ValueError(
+                f"what-if planning needs a photonic discipline, "
+                f"not {self.discipline.name!r}")
+        return self.policy.whatif(self.allocator.free, k,
+                                  self.allocator.geometry, coll_bytes)
 
 
 def simulate(kind: str, trace: Trace, n_chips: int = 64,
@@ -960,6 +992,7 @@ def simulate(kind: str, trace: Trace, n_chips: int = 64,
              n_racks: int = 1, span_racks: bool = True,
              rails_per_rack_pair: Optional[int] = None,
              serve_autoscale: "AutoscaleConfig | bool | None" = None,
+             policy: "str | PlacementPolicy | None" = None,
              ) -> SimMetrics:
     """Convenience wrapper: replay ``trace`` on discipline ``kind``
     (``n_racks > 1`` simulates a pod of racks joined by photonic rails)."""
@@ -967,7 +1000,8 @@ def simulate(kind: str, trace: Trace, n_chips: int = 64,
                          check_invariants=check_invariants, morph=morph,
                          n_racks=n_racks, span_racks=span_racks,
                          rails_per_rack_pair=rails_per_rack_pair,
-                         serve_autoscale=serve_autoscale).run()
+                         serve_autoscale=serve_autoscale,
+                         policy=policy).run()
 
 
 def compare(trace: Trace, kinds: Sequence[str] = ("lumorph", "torus", "sipac"),

@@ -91,6 +91,11 @@ class SimMetrics:
         #: contribute nothing)
         self.stranded_chip_seconds = 0.0
         self.horizon = 0.0  # last event time
+        #: chips failed out of the pool over the run — utilization is
+        #: computed over live (never-failed) chips, so this is the base
+        #: shrinkage.  Kept out of summary() (goldens pin its key set);
+        #: the engine fills it from ``allocator.retired`` after run().
+        self.retired_chips = 0
         # pricing fast path (repro.core.pricing), filled by the engine at
         # the end of run(); kept out of summary() so golden fixtures pin
         # simulation *semantics*, not planner implementation detail —

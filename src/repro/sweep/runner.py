@@ -46,6 +46,10 @@ from repro.sim.workload import (CollectiveProfile, Trace, fig2a_trace,
 WORKLOADS = ("poisson", "fig2a", "zoo", "zoo-generic", "serve",
              "serve-bursty")
 
+#: placement policies a scenario may name (repro.core.policy); the
+#: default ``packing`` is the legacy heuristic, bit-identically
+PLACEMENTS = ("packing", "locality", "future-morph")
+
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
@@ -65,16 +69,24 @@ class Scenario:
     #: SLO-driven serving autoscaler (repro.serve) — only meaningful for
     #: the ``serve*`` workloads on a photonic discipline
     autoscale: bool = False
+    #: placement policy (repro.core.policy) — photonic disciplines only;
+    #: ``packing`` is the legacy default and leaves the tag unchanged
+    placement: str = "packing"
 
     def __post_init__(self):
         if self.workload not in WORKLOADS:
             raise ValueError(
                 f"unknown workload {self.workload!r}; have {WORKLOADS}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {self.placement!r}; have {PLACEMENTS}")
 
     @property
     def policy(self) -> str:
         """The operator-facing policy axes this scenario exercises."""
         tag = self.discipline
+        if self.placement != "packing":
+            tag += f"+{self.placement}"
         if self.morph:
             tag += "+morph"
         if self.autoscale:
@@ -107,13 +119,14 @@ def sweep_grid(*, seeds: Sequence[int] = (0, 1, 2, 3),
                morphs: Sequence[bool] = (False, True),
                span_racks: Sequence[bool] = (True,),
                autoscales: Sequence[bool] = (False,),
+               placements: Sequence[str] = ("packing",),
                n_jobs: int = 40, arrival_rate: float = 0.5,
                failure_rate: float = 0.02) -> list[Scenario]:
     """The scenario cross product, with degenerate combos dropped:
-    morphing and autoscaling are photonic-fabric capabilities (electrical
-    duplicates are skipped), rack confinement needs a pod
-    (``n_racks > 1``), and the autoscale axis only applies to the
-    ``serve*`` workloads."""
+    morphing, autoscaling and placement policies are photonic-fabric
+    capabilities (electrical duplicates are skipped), rack confinement
+    needs a pod (``n_racks > 1``), and the autoscale axis only applies
+    to the ``serve*`` workloads."""
     photonic = {"lumorph"}  # electrical disciplines ignore morph entirely
     out = []
     for seed in seeds:
@@ -132,14 +145,18 @@ def sweep_grid(*, seeds: Sequence[int] = (0, 1, 2, 3),
                                 if auto and (disc not in photonic
                                              or not wl.startswith("serve")):
                                     continue
-                                out.append(Scenario(
-                                    seed=seed, discipline=disc,
-                                    n_chips=n_chips, n_racks=n_racks,
-                                    span_racks=span, morph=morph,
-                                    workload=wl, n_jobs=n_jobs,
-                                    arrival_rate=arrival_rate,
-                                    failure_rate=failure_rate,
-                                    autoscale=auto))
+                                for pl in placements:
+                                    if pl != "packing" \
+                                            and disc not in photonic:
+                                        continue
+                                    out.append(Scenario(
+                                        seed=seed, discipline=disc,
+                                        n_chips=n_chips, n_racks=n_racks,
+                                        span_racks=span, morph=morph,
+                                        workload=wl, n_jobs=n_jobs,
+                                        arrival_rate=arrival_rate,
+                                        failure_rate=failure_rate,
+                                        autoscale=auto, placement=pl))
     return out
 
 
@@ -189,7 +206,8 @@ def run_scenario(s: Scenario, profiles: Sequence[CollectiveProfile],
     sim = RackSimulator(s.discipline, trace, n_chips=s.n_chips,
                         morph=s.morph, n_racks=s.n_racks,
                         span_racks=s.span_racks,
-                        serve_autoscale=s.autoscale)
+                        serve_autoscale=s.autoscale,
+                        policy=s.placement)
     seeded = 0
     if warm is not None:
         seeded = sim.pricer.seed_entries(warm.get(s.fabric_sig, ()))

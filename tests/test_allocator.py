@@ -33,18 +33,19 @@ def test_lumorph_packs_servers():
 def test_torus_fragments():
     """Fig 2a: after odd-shaped tenants, the torus strands free chips."""
     t = TorusAllocator((4, 4, 4))
-    t.allocate("t0", 33)  # forces a 64-chip... no: rounds up to 2x4x8? → big box
+    t.allocate("t0", 5)  # rounds up to an 8-chip box
     # torus overallocates (slice sizes are boxes)
     a0 = t.allocations["t0"]
     assert a0.overallocated > 0
     free = len(t.free)
+    assert free == 64 - 8
     # a request that fits the count but not any aligned box must fail
     with pytest.raises(AllocationError):
         t.allocate("t1", free)  # free chips exist but no aligned free box
     # LUMORPH on the same history succeeds
     l = LumorphAllocator(64, tiles_per_server=8)
-    l.allocate("t0", 33)
-    l.allocate("t1", 64 - 33)  # exact fit, no fragmentation
+    l.allocate("t0", 5)
+    l.allocate("t1", 64 - 5)  # exact fit, no fragmentation
 
 
 def test_paper_fig2a_user4():
@@ -112,3 +113,82 @@ def test_utilization_accounting():
     assert a.utilization == 0.0
     a.allocate("t0", 32)
     assert a.utilization == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# edge cases: request validation, failure accounting, reassignment
+# ---------------------------------------------------------------------------
+
+def _every_allocator():
+    from repro.core.allocator import PodAllocator
+    return [LumorphAllocator(64, tiles_per_server=8),
+            PodAllocator(128, 64, tiles_per_server=8),
+            TorusAllocator((4, 4, 4)),
+            SipacAllocator(64, r=2, ell=3)]
+
+
+@pytest.mark.parametrize("k", [0, -1, -7])
+def test_nonpositive_request_raises_value_error(k):
+    """A nonsense width is a caller bug → ValueError on *every* allocator
+    kind (torus and SiPAC used to skip the check), with no state change."""
+    for a in _every_allocator():
+        free_before = set(a.free)
+        with pytest.raises(ValueError, match="positive"):
+            a.allocate("t0", k)
+        assert a.free == free_before
+        assert not a.allocations
+
+
+def test_fail_chips_mixed_free_and_allocated_conserves_accounting():
+    """Failing a mix of free and allocated chips: every chip is exactly
+    one of free / held / retired, and only the hit tenant is evicted."""
+    a = LumorphAllocator(32, tiles_per_server=8)
+    a.allocate("t0", 8)
+    a.allocate("t1", 4)
+    dead = list(a.allocations["t0"].chips[:2]) + sorted(a.free)[:2]
+    hit = a.fail_chips(dead)
+    assert hit == ["t0"]
+    assert a.retired == set(dead)
+    assert a.live_chips == 28
+    held = sum(len(x.chips) for x in a.allocations.values())
+    assert len(a.free) + held + len(a.retired) == a.n_chips
+    assert not a.retired & a.free
+
+
+def test_utilization_over_live_chips_after_retire():
+    """Utilization is used/live, not used/built: retiring idle chips must
+    not depress it (the old n_chips denominator counted dead capacity)."""
+    a = LumorphAllocator(64)
+    a.allocate("t0", 16)
+    a.fail_chips(sorted(a.free)[:32])  # 32 idle chips die
+    assert a.live_chips == 32
+    assert a.utilization == pytest.approx(0.5)  # 16 / 32, not 16 / 64
+    a.fail_chips(sorted(a.free))  # the rest of the idle pool dies
+    assert a.utilization == pytest.approx(1.0)  # t0 is all that's left
+    a.fail_chips(a.allocations["t0"].chips)
+    assert a.live_chips == 0
+    assert a.utilization == 0.0  # nothing live → defined as idle
+
+
+@given(st.lists(st.integers(min_value=1, max_value=12), min_size=1, max_size=6),
+       st.integers(min_value=1, max_value=12))
+@settings(max_examples=60, deadline=None)
+def test_reassign_release_roundtrips_free_pool(requests, new_k):
+    """Property: reassigning a tenant (to any valid chip set, any width)
+    then releasing it restores exactly the free pool its release would
+    have produced before the reassignment — no chips leak or duplicate."""
+    a = LumorphAllocator(64, tiles_per_server=8)
+    live = []
+    for i, k in enumerate(requests):
+        if k <= len(a.free):
+            a.allocate(f"t{i}", k)
+            live.append(f"t{i}")
+    t = live[0]
+    old = set(a.allocations[t].chips)
+    baseline = a.free | old  # what release must restore
+    pool = sorted(a.free | old)
+    a.reassign(t, pool[:min(new_k, len(pool))])
+    held = sum(len(x.chips) for x in a.allocations.values())
+    assert len(a.free) + held == a.n_chips  # invariant mid-flight
+    a.release(t)
+    assert a.free == baseline

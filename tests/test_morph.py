@@ -13,6 +13,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import cost_model as cm
 from repro.core.allocator import AllocationError, LumorphAllocator
 from repro.core.fabric import LumorphRack
+from repro.core.rack import Pod
 from repro.core.scheduler import transfer_schedule
 from repro.morph import (MorphConfig, MorphError, MorphPolicy, apply_plan,
                          check_conservation, plan_bypass, plan_compaction)
@@ -290,3 +291,25 @@ def test_elastic_job_bypass_path():
     assert not set(dead) & set(job.chips)
     assert not set(dead) & alloc.free  # dead chips retired for good
     check_conservation(alloc, extra_chips=len(dead))
+
+
+def test_scale_down_rejects_rail_inadmissible_keep_set():
+    """Regression: ``propose_scale_down`` must apply the same what-if
+    admission guard as ``propose_scale_up`` — a keep-set whose cheapest
+    collective prices to infinity (here: a hier-only algorithm menu and
+    unequal rack shares, so no hierarchical composition is admissible)
+    must be refused, not endorsed at infinite step cost."""
+    pod = Pod(n_racks=2, chips_per_rack=8, tiles_per_server=4)
+    policy = MorphPolicy(MorphConfig(), rack=pod, link=cm.LUMORPH_LINK,
+                         algos=("hier:lumorph2",), tiles_per_server=4,
+                         chips_per_rack=8)
+    chips = (0, 1, 2, 3, 8, 9, 10, 11)  # 4 + 4 across the two racks
+    # equal shares keep the hierarchical collective admissible → endorsed
+    ok = policy.propose_scale_down("t", chips, keep=(0, 1, 8, 9),
+                                   drain_bytes=STATE)
+    assert ok is not None
+    assert ok.new_step_s < float("inf")
+    # 4 + 2 shares admit no collective at all on this menu → refused
+    bad = policy.propose_scale_down("t", chips, keep=(0, 1, 2, 3, 8, 9),
+                                    drain_bytes=STATE)
+    assert bad is None

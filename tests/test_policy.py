@@ -1,0 +1,296 @@
+"""Placement/morph policy framework (`repro.core.policy`): the legacy
+``packing`` default stays bit-identical, scored policies deviate only for
+a strictly better objective, and the what-if capacity planner's verdicts
+match what the allocator actually commits."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.allocator import (AllocationError, LumorphAllocator,
+                                  PodAllocator)
+from repro.core.fabric import LumorphRack
+from repro.core.policy import (Admission, FabricGeometry, FutureMorphObjective,
+                               FutureMorphPolicy, LocalityPolicy,
+                               MorphObjective, PackingPolicy, PlacementPolicy,
+                               make_policy, pack_tight, place_packing,
+                               placement_candidates, register_placement,
+                               stranded_free)
+from repro.core.pricing import SchedulePricer
+from repro.core.rack import Pod
+from repro.sim import RackSimulator, simulate
+from repro.sim.workload import poisson_trace
+from repro.sweep import Scenario, sweep_grid
+
+ALGOS = ("ring", "lumorph2", "lumorph4")
+TILES = 8
+
+
+def _rack_pricer(n_servers: int = 8) -> SchedulePricer:
+    rack = LumorphRack(n_servers=n_servers, tiles_per_server=TILES)
+    return SchedulePricer(cm.LUMORPH_LINK, rack=rack, tiles_per_server=TILES)
+
+
+def _pod_pricer(n_racks: int = 2, chips_per_rack: int = 64) -> SchedulePricer:
+    pod = Pod(n_racks=n_racks, chips_per_rack=chips_per_rack,
+              tiles_per_server=TILES)
+    return SchedulePricer(cm.LUMORPH_LINK, rack=pod, tiles_per_server=TILES,
+                          chips_per_rack=chips_per_rack)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_make_policy_resolution():
+    assert isinstance(make_policy(None), PackingPolicy)
+    assert isinstance(make_policy("locality"), LocalityPolicy)
+    assert isinstance(make_policy("future-morph"), FutureMorphPolicy)
+    inst = LocalityPolicy()
+    assert make_policy(inst) is inst  # instances pass through
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        make_policy("round-robin")
+
+
+def test_register_placement():
+    class Custom(PackingPolicy):
+        name = "custom-test"
+
+    register_placement("custom-test", Custom)
+    assert isinstance(make_policy("custom-test"), Custom)
+
+
+# ---------------------------------------------------------------------------
+# packing primitives
+# ---------------------------------------------------------------------------
+
+def test_pack_tight_prefers_smallest_fitting_hole():
+    free = set(range(8)) | {8, 9, 10}  # a whole server + a 3-chip hole
+    assert sorted(pack_tight(free, 2, TILES)) == [8, 9]
+    # the legacy dense packing would carve the whole server instead
+    assert sorted(place_packing(free, 2, FabricGeometry(TILES))) == [0, 1]
+
+
+def test_pack_tight_wide_request_breaks_whole_servers_last():
+    free = set(range(8)) | {8, 9, 10}
+    got = sorted(pack_tight(free, 10, TILES))
+    assert {8, 9, 10} <= set(got)  # partial server consumed first
+
+
+def test_stranded_free_counts_partial_servers_only():
+    assert stranded_free(set(range(8)), TILES) == 0  # whole server
+    assert stranded_free({0, 1, 8, 9, 10}, TILES) == 5
+    assert stranded_free(set(range(8)) | {8}, TILES) == 1
+
+
+# ---------------------------------------------------------------------------
+# packing bit-identity
+# ---------------------------------------------------------------------------
+
+def test_packing_policy_identical_to_default_allocator():
+    """policy="packing" must commit the exact chips the pre-policy
+    allocator did, over a churning alloc/release history."""
+    a = LumorphAllocator(64, tiles_per_server=TILES)
+    b = LumorphAllocator(64, tiles_per_server=TILES, policy="packing")
+    for alloc in (a, b):
+        alloc.allocate("t0", 5)
+        alloc.allocate("t1", 12)
+        alloc.release("t0")
+        alloc.allocate("t2", 7)
+    assert a.allocations.keys() == b.allocations.keys()
+    for t in a.allocations:
+        assert a.allocations[t].chips == b.allocations[t].chips
+
+    pa = PodAllocator(128, 64, tiles_per_server=TILES)
+    pb = PodAllocator(128, 64, tiles_per_server=TILES, policy="packing")
+    for alloc in (pa, pb):
+        alloc.allocate("t0", 60)
+        alloc.allocate("t1", 40)  # forced to the other rack
+        alloc.allocate("t2", 20)  # spans
+    for t in pa.allocations:
+        assert pa.allocations[t].chips == pb.allocations[t].chips
+
+
+def test_engine_packing_policy_bit_identical():
+    trace = poisson_trace(20, n_chips=64, failure_rate=0.02, seed=3)
+    base = simulate("lumorph", trace, n_chips=64).summary()
+    named = simulate("lumorph", trace, n_chips=64, policy="packing").summary()
+    assert base == named
+
+
+# ---------------------------------------------------------------------------
+# scored policies
+# ---------------------------------------------------------------------------
+
+def test_future_morph_preserves_whole_servers():
+    """A 3-chip tenant goes to the 3-chip hole, keeping the fully-free
+    server intact for future wide tenants — the lookahead objective's
+    whole point.  Packing carves the whole server."""
+    free = set(range(8)) | {8, 9, 10}
+    geom = FabricGeometry(TILES)
+    pricer = _rack_pricer(2)
+    assert place_packing(free, 3, geom) == (0, 1, 2)
+    fm = FutureMorphPolicy().bind(pricer, ALGOS)
+    assert fm.place(free, 3, geom) == (8, 9, 10)
+    # the residual it leaves strands nothing
+    assert stranded_free(free - {8, 9, 10}, TILES) == 0
+
+
+def test_locality_ties_keep_legacy_choice():
+    """Single-server candidates canonicalize to the same priced layout,
+    so locality must fall back to the legacy packing choice."""
+    free = set(range(8)) | {8, 9, 10}
+    geom = FabricGeometry(TILES)
+    loc = LocalityPolicy().bind(_rack_pricer(2), ALGOS)
+    assert loc.place(free, 3, geom) == place_packing(free, 3, geom)
+
+
+def test_locality_picks_strictly_cheaper_rack():
+    """Pod: the best-fit rack only offers a 2-server scattered placement;
+    the most-free rack has a whole server.  The single-server collective
+    prices strictly cheaper, so locality deviates from packing."""
+    free = {0, 1, 2, 8, 9} | set(range(64, 80))
+    geom = FabricGeometry(TILES, chips_per_rack=64, span_racks=True)
+    pricer = _pod_pricer()
+    legacy = place_packing(free, 5, geom)
+    assert legacy == (0, 1, 2, 8, 9)  # best-fit rack, spans two servers
+    loc = LocalityPolicy().bind(pricer, ALGOS)
+    chosen = loc.place(free, 5, geom)
+    assert chosen == (64, 65, 66, 67, 68)  # one server on the other rack
+    assert loc._step_price(chosen, geom) < loc._step_price(legacy, geom)
+
+
+def test_candidates_lead_with_legacy_and_dedupe():
+    free = set(range(16))
+    geom = FabricGeometry(TILES)
+    cands = placement_candidates(free, 4, geom)
+    assert cands[0] == place_packing(free, 4, geom)
+    assert len(cands) == len(set(cands))
+
+
+# ---------------------------------------------------------------------------
+# what-if capacity planner
+# ---------------------------------------------------------------------------
+
+def test_whatif_capacity_and_fragmentation_verdicts():
+    pol = PackingPolicy().bind(_rack_pricer(), ALGOS)
+    geom = FabricGeometry(TILES)
+    v = pol.whatif({0, 1, 2}, 5, geom)
+    assert not v.admitted and v.reason == "capacity" and v.chips == ()
+    assert v.stretch == float("inf")
+    with pytest.raises(ValueError, match="positive"):
+        pol.whatif({0, 1, 2}, 0, geom)
+    # rack-confined pod, no single rack fits → fragmentation, and the
+    # allocator agrees with an AllocationError
+    confined = FabricGeometry(TILES, chips_per_rack=64, span_racks=False)
+    split = {0, 1, 2} | {64, 65, 66}
+    v = pol.whatif(split, 5, confined)
+    assert not v.admitted and v.reason == "fragmentation"
+
+
+def test_whatif_admitted_reports_stretch():
+    pol = PackingPolicy().bind(_pod_pricer(), ALGOS)
+    geom = FabricGeometry(TILES, chips_per_rack=64, span_racks=True)
+    # only a scattered 2-server placement exists → dearer than ideal
+    v = pol.whatif({0, 1, 2, 8, 9}, 5, geom)
+    assert v.admitted and v.chips == (0, 1, 2, 8, 9)
+    assert v.stretch > 1.0
+    # a dense placement is ideal → stretch exactly 1.0
+    w = pol.whatif(set(range(64, 80)), 5, geom)
+    assert w.admitted and w.stretch == 1.0
+
+
+def test_unbound_policy_raises_on_pricing():
+    pol = LocalityPolicy()  # no bind()
+    with pytest.raises(RuntimeError, match="unbound"):
+        pol.whatif(set(range(16)), 4, FabricGeometry(TILES))
+
+
+@given(st.lists(st.integers(min_value=1, max_value=40), min_size=1, max_size=10),
+       st.lists(st.integers(min_value=0, max_value=9), min_size=0, max_size=5))
+@settings(max_examples=25, deadline=None)
+def test_whatif_matches_commit(requests, releases):
+    """Property: the planner's verdict always matches the allocator —
+    same accept/reject, same exact chip set — under free-pool churn,
+    for every built-in policy."""
+    for idx in releases:
+        requests.insert(min(idx, len(requests)), -1)  # -1 → release
+    for placement in ("packing", "locality", "future-morph"):
+        a = LumorphAllocator(32, tiles_per_server=TILES, policy=placement)
+        a.policy.bind(_rack_pricer(4), ALGOS)
+        live = []
+        for i, k in enumerate(requests):
+            if k == -1:
+                if live:
+                    a.release(live.pop(i % len(live)))
+                continue
+            v = a.whatif(k)
+            try:
+                got = a.allocate(f"t{i}", k)
+            except AllocationError:
+                got = None
+            assert v.admitted == (got is not None)
+            if got is not None:
+                live.append(f"t{i}")
+                assert v.chips == got.chips
+                assert v.stretch >= 1.0 or v.step_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# morph objectives
+# ---------------------------------------------------------------------------
+
+def test_morph_objective_defaults():
+    assert MorphObjective().compaction_targets((0, 1), (2, 3), TILES) == (None,)
+    fm = FutureMorphObjective()
+    targets = fm.compaction_targets((0, 1, 8), {2, 3}, TILES)
+    assert None in targets
+    assert any(t is not None for t in targets)  # adds a tight target
+    assert FutureMorphPolicy().morph_objective().name == "future-morph"
+    assert PackingPolicy().morph_objective().name == "packing"
+
+
+# ---------------------------------------------------------------------------
+# engine + sweep wiring
+# ---------------------------------------------------------------------------
+
+def test_engine_policy_wiring():
+    trace = poisson_trace(10, n_chips=64, seed=1)
+    sim = RackSimulator("lumorph", trace, n_chips=64, policy="future-morph")
+    assert sim.policy.name == "future-morph"
+    v = sim.whatif(4)
+    assert isinstance(v, Admission) and v.admitted
+    sim.run()  # policy threads through a full run without incident
+
+    # electrical fabrics have no placement choice: the policy is ignored
+    # and what-if planning is refused
+    tsim = RackSimulator("torus", trace, n_chips=64, policy="future-morph")
+    assert tsim.policy.name == "packing"
+    with pytest.raises(ValueError, match="photonic"):
+        tsim.whatif(4)
+
+
+def test_metrics_surface_retired_chips():
+    trace = poisson_trace(20, n_chips=64, failure_rate=0.1, seed=5)
+    sim = RackSimulator("lumorph", trace, n_chips=64)
+    m = sim.run()
+    assert m.retired_chips == len(sim.allocator.retired)
+    assert trace.failures and m.retired_chips > 0
+    assert "retired_chips" not in m.summary()  # golden key set unchanged
+
+
+def test_scenario_placement_tag_and_grid():
+    assert Scenario(placement="locality").policy == "lumorph+locality"
+    assert Scenario(placement="packing").policy == "lumorph"
+    s = Scenario(placement="future-morph", morph=True)
+    assert s.policy == "lumorph+future-morph+morph"
+    with pytest.raises(ValueError, match="unknown placement"):
+        Scenario(placement="spread")
+    grid = sweep_grid(seeds=(0,), disciplines=("lumorph", "torus"),
+                      workloads=("zoo",), morphs=(False,),
+                      placements=("packing", "locality"))
+    tags = {s.policy for s in grid}
+    assert tags == {"lumorph", "lumorph+locality", "torus"}
+    # electrical disciplines get no non-default placement duplicates
+    assert not any(s.discipline == "torus" and s.placement != "packing"
+                   for s in grid)
