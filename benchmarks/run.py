@@ -14,6 +14,9 @@ CSV rows for:
   * sim_policy             — placement-policy tournament (packing vs
                              locality vs future-morph) + what-if planner
                              consistency
+  * sim_chaos              — fabric fault injection: degraded-mode vs
+                             fail-stop goodput, zero-fault golden
+                             identity, OCS glitch retry/backoff p99
   * bench_sim_scale        — planner latency (schedules priced/s, fast vs
                              eager) + simulator events/s at pod scale
   * bench_kernels          — Pallas kernels vs oracles
@@ -27,7 +30,10 @@ results machine-readably (one record per CSV row, grouped by benchmark) so
 the perf trajectory can be tracked across PRs (``BENCH_*.json``).
 ``--seed N`` re-seeds the trace generators of benchmarks that take one
 (currently the simulator-driven ones), for reproducible what-if sweeps —
-claims are only pinned for the default seed.  ``--profile PATH`` wraps the
+claims are only pinned for the default seed.  ``--faults PATH`` hands a
+fault-event JSONL trace to benchmarks whose run() accepts one (currently
+sim_chaos), replaying recorded chaos instead of the generated default.
+``--profile PATH`` wraps the
 selected benchmarks in cProfile and dumps sorted-cumtime stats to PATH, so
 perf regressions are diagnosable without editing any benchmark.
 """
@@ -42,11 +48,11 @@ def _modules():
     from benchmarks import (bench_collective_exec, bench_kernels,
                             bench_overlap, bench_sim_scale, bench_sweep,
                             fig2a_fragmentation, fig4a_training,
-                            fig4b_collectives, sim_morph, sim_pod,
-                            sim_policy, sim_rack, sim_serve)
+                            fig4b_collectives, sim_chaos, sim_morph,
+                            sim_pod, sim_policy, sim_rack, sim_serve)
     mods = [fig4b_collectives, fig4a_training, fig2a_fragmentation,
             sim_rack, sim_morph, sim_serve, sim_pod, sim_policy,
-            bench_sim_scale, bench_sweep, bench_kernels,
+            sim_chaos, bench_sim_scale, bench_sweep, bench_kernels,
             bench_collective_exec, bench_overlap]
     return {m.__name__.split(".")[-1]: m for m in mods}
 
@@ -104,6 +110,9 @@ def main(argv=None) -> None:
     parser.add_argument("--jobs", type=int, default=None,
                         help="worker processes for benchmarks whose run() "
                              "accepts jobs (the sweep-capable ones)")
+    parser.add_argument("--faults", metavar="PATH", default=None,
+                        help="fault-event JSONL trace for benchmarks whose "
+                             "run() accepts faults (the chaos ones)")
     parser.add_argument("--profile", metavar="PATH", default=None,
                         help="wrap the selected benchmarks in cProfile and "
                              "dump sorted-cumtime stats to PATH")
@@ -136,6 +145,8 @@ def main(argv=None) -> None:
             kwargs["seed"] = args.seed
         if args.jobs is not None and "jobs" in params:
             kwargs["jobs"] = args.jobs
+        if args.faults is not None and "faults" in params:
+            kwargs["faults"] = args.faults
         if profiler is not None:
             lines = profiler.runcall(m.run, **kwargs)
         else:

@@ -1,0 +1,143 @@
+"""Fabric fault injection: degraded-mode operation vs fail-stop.
+
+Three experiments on the LUMORPH discipline with a *scarce* fiber budget
+(2 fibers per server pair, so fiber losses bite immediately):
+
+  * **degraded vs fail-stop** — the same Fig 2a churn with fiber cuts,
+    TRX-lane deaths, and BER derates (each repaired an exponential MTTR
+    later), replayed twice: once through the health-aware degraded-mode
+    engine (reroute → morph-away → elastic shrink), and once with every
+    fabric fault recast as permanently killing all chips touching the
+    broken element (``fail_stop_trace`` — the classic fail-stop model).
+  * **zero-fault identity** — the committed golden trace replayed through
+    the health-aware engine; its ``summary()`` must equal the committed
+    fixture *exactly* (the fault machinery must be invisible until a
+    fault actually fires), and the trace file must survive a JSONL
+    round-trip byte-identically.
+  * **OCS glitch storm** — periodic transient establishment-failure
+    windows, replayed with the retry/backoff policy and with the
+    no-retry baseline (establishment stalls until the glitch passes).
+
+Claims (emitted as PASS/FAIL rows, gated in CI):
+
+  * ``claim_chaos_degraded_beats_failstop`` — degraded-mode keeps
+    strictly higher goodput *and* acceptance than fail-stop on the same
+    chaos trace.
+  * ``claim_chaos_zero_fault_identical``   — golden replay summary ==
+    committed fixture, and the trace file round-trips byte-identically.
+  * ``claim_chaos_ocs_p99_bounded``        — under the glitch storm the
+    p99 per-establishment delay with retry/backoff stays within the
+    policy's total backoff budget, and is strictly below the no-retry
+    baseline's p99 (which stalls for whole glitch windows).
+
+``BENCH_CHAOS_QUICK=1`` shrinks the traces for the fast CI job; claims
+are pinned for both configurations.  ``--faults PATH`` (via
+``benchmarks.run``) substitutes the fault events of a JSONL trace for
+the generated chaos, keeping the generated jobs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+from repro.core.health import OCSRetryPolicy
+from repro.sim import RackSimulator, Trace
+from repro.sim.workload import chaos_trace, fail_stop_trace, glitch_storm_trace
+
+N_CHIPS = 64
+TILES_PER_SERVER = 8
+#: scarce inter-server fibers (sim_morph's setting): a fiber cut on a
+#: 2-fiber pair halves the budget, so degradation is visible in prices
+FIBERS_PER_PAIR = 2
+
+GOLDEN = pathlib.Path(__file__).resolve().parent.parent / "tests" / "golden"
+
+
+def _quick() -> bool:
+    return bool(os.environ.get("BENCH_CHAOS_QUICK"))
+
+
+def _chaos(seed: int) -> Trace:
+    n = 120 if _quick() else 400
+    return chaos_trace(n, n_chips=N_CHIPS, tiles_per_server=TILES_PER_SERVER,
+                       link_fail_rate=0.05, trx_fail_rate=0.02,
+                       degrade_rate=0.02, max_fibers_cut=2, derate=2.0,
+                       mttr=30.0, seed=seed)
+
+
+def _storm(seed: int) -> Trace:
+    n = 60 if _quick() else 200
+    return glitch_storm_trace(n, n_chips=N_CHIPS, glitch_every=6.0,
+                              glitch_duration=3.0, glitch_prob=0.5,
+                              seed=seed)
+
+
+def _sim(trace: Trace, **kw) -> RackSimulator:
+    sim = RackSimulator("lumorph", trace, n_chips=N_CHIPS,
+                        fibers_per_server_pair=FIBERS_PER_PAIR,
+                        morph=True, **kw)
+    sim.run()
+    return sim
+
+
+def run(seed: int = 0, faults: "str | None" = None) -> list[str]:
+    lines = ["name,us_per_call,derived"]
+
+    # ---- degraded-mode vs fail-stop ----------------------------------------
+    trace = _chaos(seed)
+    if faults is not None:
+        # substitute external fault events (--faults PATH): keep the
+        # generated jobs so the comparison stays tenant-identical
+        trace = Trace(trace.jobs, Trace.load(faults).failures)
+    failstop = fail_stop_trace(trace, tiles_per_server=TILES_PER_SERVER)
+    deg = _sim(trace).metrics
+    fs = _sim(failstop).metrics
+    ds, fss = deg.summary(), fs.summary()
+    cs = deg.chaos_summary()
+    for tag, s in (("degraded", ds), ("failstop", fss)):
+        lines.append(f"sim_chaos/{tag}/acceptance_rate,,{s['acceptance_rate']}")
+        lines.append(f"sim_chaos/{tag}/goodput_chip_seconds,,"
+                     f"{s['goodput_chip_seconds']}")
+        lines.append(f"sim_chaos/{tag}/evicted,,{s['evicted']}")
+        lines.append(f"sim_chaos/{tag}/completed,,{s['completed']}")
+    for key in ("fabric_faults", "repairs", "degraded_s", "availability",
+                "mttr_s", "reroutes", "degraded_goodput_chip_seconds"):
+        lines.append(f"sim_chaos/degraded/{key},,{cs[key]}")
+    beats = (ds["goodput_chip_seconds"] > fss["goodput_chip_seconds"]
+             and ds["acceptance_rate"] > fss["acceptance_rate"])
+    lines.append("sim_chaos/claim_chaos_degraded_beats_failstop,,"
+                 f"{'PASS' if beats else 'FAIL'}")
+
+    # ---- zero-fault identity on the committed golden -----------------------
+    raw = (GOLDEN / "trace_0.jsonl").read_text()
+    golden_trace = Trace.from_jsonl(raw)
+    roundtrip_ok = golden_trace.to_jsonl() == raw
+    replay = RackSimulator("lumorph", golden_trace, n_chips=64,
+                           fibers_per_server_pair=2, morph=True
+                           ).run().summary()
+    with open(GOLDEN / "fig2a_small_morph.json") as f:
+        fixture = json.load(f)
+    identical = replay == fixture
+    lines.append(f"sim_chaos/golden/roundtrip_byte_identical,,{roundtrip_ok}")
+    lines.append(f"sim_chaos/golden/summary_identical,,{identical}")
+    lines.append("sim_chaos/claim_chaos_zero_fault_identical,,"
+                 f"{'PASS' if roundtrip_ok and identical else 'FAIL'}")
+
+    # ---- OCS glitch storm: retry/backoff vs stall --------------------------
+    storm = _storm(seed)
+    policy = OCSRetryPolicy()
+    retry = _sim(storm, ocs_retry=policy).metrics
+    stall = _sim(storm, ocs_retry=None).metrics
+    rc, sc = retry.chaos_summary(), stall.chaos_summary()
+    lines.append(f"sim_chaos/retry/ocs_delay_p99_s,,{rc['ocs_delay_p99_s']}")
+    lines.append(f"sim_chaos/retry/retries,,{rc['retries']}")
+    lines.append(f"sim_chaos/retry/ocs_escalations,,{rc['ocs_escalations']}")
+    lines.append(f"sim_chaos/noretry/ocs_delay_p99_s,,{sc['ocs_delay_p99_s']}")
+    lines.append(f"sim_chaos/retry/backoff_budget_s,,{policy.total_backoff_s}")
+    bounded = (retry.ocs_delay_p99_s <= policy.total_backoff_s * (1 + 1e-9)
+               and stall.ocs_delay_p99_s > retry.ocs_delay_p99_s)
+    lines.append("sim_chaos/claim_chaos_ocs_p99_bounded,,"
+                 f"{'PASS' if bounded else 'FAIL'}")
+    return lines

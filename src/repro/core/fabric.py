@@ -183,6 +183,11 @@ class LumorphRack:
         self.servers = [LightpathFabric(tiles_per_server, trx_banks_per_tile)
                         for _ in range(n_servers)]
         self.fibers_per_server_pair = fibers_per_server_pair
+        #: optional FabricHealth (repro.core.health): dead fibers/lanes,
+        #: derates.  None (or a fault-free instance) keeps every check on
+        #: the vectorized immortal-fabric path, bit-identical to before
+        #: the health model existed.
+        self.health = None
         self._fibers_in_use: dict[tuple[int, int], int] = {}
         self._circuits: dict[int, Circuit] = {}
         self._next_circuit_id = 0
@@ -275,10 +280,16 @@ class LumorphRack:
 
         The healthy path is fully vectorized; only a detected violation
         falls back to per-pair accounting to produce the exact diagnosis.
+        With live fabric faults (``self.health`` truthy) the per-pair
+        path always runs, against each chip's/pair's *effective* budget.
         """
         arr = round_pairs_array(pairs)
         banks = self.servers[0].trx_banks_per_tile
         wavelengths = self.servers[0].wavelengths_per_tile
+        if self.health is not None and self.health:
+            self._validate_round_degraded(arr, banks, wavelengths,
+                                          check_fibers)
+            return
         ok = (peak_multiplicity(arr[:, 0]) <= min(banks, wavelengths)
               and peak_multiplicity(arr[:, 1]) <= banks)
         srv = arr // self.tiles_per_server
@@ -304,6 +315,47 @@ class LumorphRack:
         if check_fibers:
             validate_shared_budget(fibers, self.fibers_per_server_pair,
                                    "servers", "fibers")
+
+    def _validate_round_degraded(self, arr: np.ndarray, banks: int,
+                                 wavelengths: int,
+                                 check_fibers: bool) -> None:
+        """Per-pair dry check against a faulted fabric: each chip's TX/RX
+        budget shrinks by its dead TRX lanes, each server pair's fiber
+        budget by its dark fibers.  A chip with no healthy lane — or,
+        with ``check_fibers``, a pair with no healthy fiber — fails any
+        round that touches it."""
+        h = self.health
+        tx: dict[int, int] = {}
+        rx: dict[int, int] = {}
+        fibers: dict[tuple[int, int], int] = {}
+        for s, d in arr.tolist():
+            tx[s] = tx.get(s, 0) + 1
+            rx[d] = rx.get(d, 0) + 1
+            s_srv, d_srv = self.server_of(s), self.server_of(d)
+            if s_srv != d_srv:
+                key = (min(s_srv, d_srv), max(s_srv, d_srv))
+                fibers[key] = fibers.get(key, 0) + 1
+        for chip, n in tx.items():
+            healthy = banks - h.lanes_lost(chip)
+            if n > healthy:
+                raise CircuitError(
+                    f"chip {chip} needs {n} TX circuits > {healthy} healthy "
+                    f"TRX banks")
+            if n > wavelengths:
+                raise CircuitError(
+                    f"chip {chip} needs {n} wavelengths > {wavelengths}")
+        for chip, n in rx.items():
+            healthy = banks - h.lanes_lost(chip)
+            if n > healthy:
+                raise CircuitError(
+                    f"chip {chip} needs {n} RX circuits > {healthy} healthy "
+                    f"TRX banks")
+        if check_fibers:
+            for key, n in fibers.items():
+                budget = self.fibers_per_server_pair - h.fibers_lost(key)
+                if n > budget:
+                    raise CircuitError(
+                        f"servers {key} need {n} fibers > {budget} healthy")
 
     def feasible_round(self, pairs: list[tuple[int, int]],
                        check_fibers: bool = True) -> bool:

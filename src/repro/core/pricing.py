@@ -134,9 +134,25 @@ class SchedulePricer:
             reconfig=min(link.reconfig, rail.reconfig), name="bound-floor")
 
     # -- keys ---------------------------------------------------------------
+    def _health_suffix(self) -> tuple:
+        """Cache-key suffix while the fabric carries permanent faults
+        (``rack.health`` truthy — :mod:`repro.core.health`): entries are
+        tagged with the health epoch, so every fail/repair/derate
+        invalidates them wholesale and prices from one health state never
+        serve another.  Empty on a healthy (or fully repaired) fabric —
+        zero-fault keys, and therefore prices, are bit-identical to a
+        pricer with no health model at all."""
+        h = getattr(self.rack, "health", None)
+        if h is not None and h:
+            return ("#health", h.epoch)
+        return ()
+
     def cache_key_chips(self, chips: Sequence[int]) -> tuple[int, ...]:
-        """The representative layout a chip tuple is priced as."""
-        if not self.canonical:
+        """The representative layout a chip tuple is priced as.  Live
+        fabric faults break layout isomorphism (the price depends on
+        *which* fibers/chips are hurt), so a faulted fabric prices
+        literal chip tuples."""
+        if not self.canonical or self._health_suffix():
             return tuple(chips)
         return canonical_layout(chips, self.tiles_per_server,
                                 self.chips_per_rack)
@@ -152,7 +168,8 @@ class SchedulePricer:
         ``_key_chips`` lets :meth:`cheapest` canonicalize once per call
         instead of once per candidate."""
         key = (algo, _key_chips if _key_chips is not None
-               else self.cache_key_chips(chips), n_bytes)
+               else self.cache_key_chips(chips), n_bytes) \
+            + self._health_suffix()
         cached = self._cache.get(key)
         if cached is not None:
             self._cache.move_to_end(key)
@@ -194,7 +211,8 @@ class SchedulePricer:
         when the program is inadmissible).  Shape-only — chunking never
         materializes Transfer tables — and cached on the canonical layout
         under a ``("chunks", …)`` key next to the monolithic prices."""
-        key = ("chunks", algo, self.cache_key_chips(chips), n_bytes, n_chunks)
+        key = ("chunks", algo, self.cache_key_chips(chips), n_bytes,
+               n_chunks) + self._health_suffix()
         cached = self._cache.get(key)
         if cached is not None:
             self._cache.move_to_end(key)
@@ -248,6 +266,11 @@ class SchedulePricer:
         width plus the inter ring stage's α/β floor; a 1−1e-9 safety
         factor keeps the bound strictly conservative against float
         reordering, at no practical loss of pruning power.
+
+        Valid under any fabric health state: faults only ever *raise*
+        prices (budgets shrink, derates are ≥ 1), so the uncontended
+        floor bound stays below the degraded price and pruning remains
+        exact — the degraded-pricing property tests pin this.
         """
         p = len(chips)
         if p <= 1:
@@ -308,8 +331,10 @@ class SchedulePricer:
         built over the same link/rack geometry.  The sweep engine ships
         these across process boundaries to warm sibling workers
         (:mod:`repro.sweep`); they are plain tuples of str/int/float, so
-        they pickle cheaply."""
-        items = list(self._cache.items())
+        they pickle cheaply.  Entries priced under live fabric faults
+        (``"#health"``-tagged keys) are excluded — health state is local
+        to one simulator and never portable across workers."""
+        items = [kv for kv in self._cache.items() if "#health" not in kv[0]]
         items.reverse()  # OrderedDict iterates LRU→MRU; exports want MRU first
         if limit is not None:
             items = items[:limit]

@@ -81,6 +81,10 @@ class Pod:
         self.fibers_per_server_pair = fibers_per_server_pair
         self.rails_per_rack_pair = rails_per_rack_pair
         self.rail_link = rail_link
+        #: optional FabricHealth (repro.core.health); chips/pairs are
+        #: keyed pod-globally.  None (or fault-free) keeps the vectorized
+        #: immortal-fabric checks, bit-identical to the pre-health model.
+        self.health = None
         self.racks = [
             LumorphRack(n_servers=chips_per_rack // tiles_per_server,
                         tiles_per_server=tiles_per_server,
@@ -212,6 +216,10 @@ class Pod:
         fab = self.racks[0].servers[0]
         banks = fab.trx_banks_per_tile
         wavelengths = fab.wavelengths_per_tile
+        if self.health is not None and self.health:
+            self._validate_round_degraded(arr, banks, wavelengths,
+                                          check_fibers)
+            return
         ok = (peak_multiplicity(arr[:, 0]) <= min(banks, wavelengths)
               and peak_multiplicity(arr[:, 1]) <= banks)
         if ok and check_fibers:
@@ -248,6 +256,56 @@ class Pod:
                                    "servers", "fibers")
             validate_shared_budget(rails, self.rails_per_rack_pair,
                                    "racks", "rails")
+
+    def _validate_round_degraded(self, arr, banks: int, wavelengths: int,
+                                 check_fibers: bool) -> None:
+        """Pod-tier dry check against a faulted fabric: per-chip TRX
+        budgets shrink by dead lanes, per-server-pair fiber and
+        per-rack-pair rail budgets by dark fibers/rails (the pod
+        analogue of ``LumorphRack._validate_round_degraded``)."""
+        h = self.health
+        tx: dict[int, int] = {}
+        rx: dict[int, int] = {}
+        fibers: dict[tuple[int, int], int] = {}
+        rails: dict[tuple[int, int], int] = {}
+        for s, d in arr.tolist():
+            tx[s] = tx.get(s, 0) + 1
+            rx[d] = rx.get(d, 0) + 1
+            s_rack, d_rack = self.rack_of(s), self.rack_of(d)
+            if s_rack != d_rack:
+                key = (min(s_rack, d_rack), max(s_rack, d_rack))
+                rails[key] = rails.get(key, 0) + 1
+            else:
+                s_srv, d_srv = self.server_of(s), self.server_of(d)
+                if s_srv != d_srv:
+                    skey = (min(s_srv, d_srv), max(s_srv, d_srv))
+                    fibers[skey] = fibers.get(skey, 0) + 1
+        for chip, n in tx.items():
+            healthy = banks - h.lanes_lost(chip)
+            if n > healthy:
+                raise CircuitError(
+                    f"chip {chip} needs {n} TX circuits > {healthy} healthy "
+                    f"TRX banks")
+            if n > wavelengths:
+                raise CircuitError(
+                    f"chip {chip} needs {n} wavelengths > {wavelengths}")
+        for chip, n in rx.items():
+            healthy = banks - h.lanes_lost(chip)
+            if n > healthy:
+                raise CircuitError(
+                    f"chip {chip} needs {n} RX circuits > {healthy} healthy "
+                    f"TRX banks")
+        if check_fibers:
+            for key, n in fibers.items():
+                budget = self.fibers_per_server_pair - h.fibers_lost(key)
+                if n > budget:
+                    raise CircuitError(
+                        f"servers {key} need {n} fibers > {budget} healthy")
+            for key, n in rails.items():
+                budget = self.rails_per_rack_pair - h.rails_lost(key)
+                if n > budget:
+                    raise CircuitError(
+                        f"racks {key} need {n} rails > {budget} healthy")
 
     def feasible_round(self, pairs,
                        check_fibers: bool = True) -> bool:

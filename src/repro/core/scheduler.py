@@ -224,13 +224,27 @@ class Schedule:
         (crossing, fiber/rail stretch) are reused across consecutive
         rounds with an unchanged circuit set — e.g. ring's 2(p−1)
         identical rounds are analyzed once.
+
+        With live fabric faults (``rack.health`` truthy — see
+        :mod:`repro.core.health`) each pair time-shares its own *healthy*
+        budget, the round's β pays the worst derate among its chips, and
+        a round whose circuits need a pair with no healthy medium left
+        prices ``inf`` (no amount of time-sharing crosses a dark cut).
+        A fault-free health object takes the exact legacy path, so
+        zero-fault prices are bit-identical to a fabric with no health
+        model at all.
         """
         pod = rack if isinstance(rack, Pod) else None
         cpr = pod.chips_per_rack if pod is not None else None
+        health = getattr(rack, "health", None) if rack is not None else None
+        if health is not None and not health:
+            health = None
         geom_arr: Optional[np.ndarray] = None
         crossing = False
         stretch = 1
         rail_stretch = 1
+        derate = 1.0
+        dead_round = False
         for r, changed in self._changed_flags():
             arr = r.pairs_arr
             # `changed` (the MZI-window flag) compares circuit *sets*, but
@@ -242,16 +256,31 @@ class Schedule:
                 crossing = pod is not None and bool(
                     (arr[:, 0] // cpr != arr[:, 1] // cpr).any())
                 stretch = 1
+                dead_round = False
                 if rack is not None:
-                    demand = _round_fiber_demand(arr, rack.tiles_per_server,
-                                                 chips_per_rack=cpr)
-                    if demand > rack.fibers_per_server_pair:
-                        stretch = -(-demand // rack.fibers_per_server_pair)
+                    if health is None:
+                        demand = _round_fiber_demand(arr, rack.tiles_per_server,
+                                                     chips_per_rack=cpr)
+                        if demand > rack.fibers_per_server_pair:
+                            stretch = -(-demand // rack.fibers_per_server_pair)
+                    else:
+                        stretch, dead_round = _degraded_fiber_stretch(
+                            arr, rack, health, cpr)
                 rail_stretch = 1
                 if crossing:
-                    demand = _round_rail_demand(arr, cpr)
-                    if demand > pod.rails_per_rack_pair:
-                        rail_stretch = -(-demand // pod.rails_per_rack_pair)
+                    if health is None:
+                        demand = _round_rail_demand(arr, cpr)
+                        if demand > pod.rails_per_rack_pair:
+                            rail_stretch = -(-demand // pod.rails_per_rack_pair)
+                    else:
+                        rail_stretch, rail_dead = _degraded_rail_stretch(
+                            arr, pod, health)
+                        dead_round = dead_round or rail_dead
+                derate = (health.worst_derate(int(c) for c in np.unique(arr))
+                          if health is not None else 1.0)
+            if dead_round:
+                yield (1 if crossing else 0), float("inf")
+                continue
             rail = pod.rail_link if crossing else None
             governing = rail if crossing else link
             seconds = governing.round_alpha(changed)
@@ -259,6 +288,8 @@ class Schedule:
             if crossing:
                 beta_s = max(beta_s, r.bytes_per_circuit * r.egress_fanout
                              * rail.beta * rail_stretch)
+            if derate != 1.0:
+                beta_s *= derate
             yield (1 if crossing else 0), seconds + beta_s
 
     def cost(self, link: LinkModel,
@@ -326,6 +357,52 @@ def _round_rail_demand(pairs, chips_per_rack: int) -> int:
     rk = arr // chips_per_rack
     rk = rk[rk[:, 0] != rk[:, 1]]
     return peak_pair_multiplicity(rk[:, 0], rk[:, 1])
+
+
+def _pair_demands(ab: np.ndarray) -> dict[tuple[int, int], int]:
+    """Unordered-pair circuit counts of one round — the per-pair form of
+    ``peak_pair_multiplicity``, for budgets that differ per pair (a
+    faulted fabric)."""
+    if ab.size == 0:
+        return {}
+    lo = np.minimum(ab[:, 0], ab[:, 1])
+    hi = np.maximum(ab[:, 0], ab[:, 1])
+    base = int(hi.max()) + 1
+    uniq, counts = np.unique(lo * base + hi, return_counts=True)
+    return {(int(k // base), int(k % base)): int(c)
+            for k, c in zip(uniq.tolist(), counts.tolist())}
+
+
+def _degraded_fiber_stretch(arr: np.ndarray, rack, health,
+                            chips_per_rack: Optional[int]) -> tuple[int, bool]:
+    """``(stretch, dead)`` for one round on a faulted fabric: every
+    server pair serializes over its own healthy fiber budget; a pair
+    with demand but no healthy fiber makes the round inadmissible."""
+    a = arr
+    if chips_per_rack is not None:
+        a = a[a[:, 0] // chips_per_rack == a[:, 1] // chips_per_rack]
+    srv = a // rack.tiles_per_server
+    srv = srv[srv[:, 0] != srv[:, 1]]
+    stretch = 1
+    for pair, demand in _pair_demands(srv).items():
+        budget = rack.fibers_per_server_pair - health.fibers_lost(pair)
+        if budget <= 0:
+            return 1, True
+        stretch = max(stretch, -(-demand // budget))
+    return stretch, False
+
+
+def _degraded_rail_stretch(arr: np.ndarray, pod, health) -> tuple[int, bool]:
+    """Rail analogue of :func:`_degraded_fiber_stretch` (pod tier)."""
+    rk = arr // pod.chips_per_rack
+    rk = rk[rk[:, 0] != rk[:, 1]]
+    stretch = 1
+    for pair, demand in _pair_demands(rk).items():
+        budget = pod.rails_per_rack_pair - health.rails_lost(pair)
+        if budget <= 0:
+            return 1, True
+        stretch = max(stretch, -(-demand // budget))
+    return stretch, False
 
 
 # ---------------------------------------------------------------------------
@@ -1035,21 +1112,51 @@ def candidate_algos(algos: Sequence[str], chips: Sequence[int],
 # ---------------------------------------------------------------------------
 
 def fiber_demand(schedule: Schedule, tiles_per_server: int,
-                 chips_per_rack: Optional[int] = None) -> int:
+                 chips_per_rack: Optional[int] = None,
+                 health=None) -> int:
     """Peak per-server-pair fiber demand across the schedule's rounds
-    (cross-rack circuits excluded when ``chips_per_rack`` is given)."""
+    (cross-rack circuits excluded when ``chips_per_rack`` is given).
+
+    With a faulted ``health`` (:class:`repro.core.health.FabricHealth`),
+    each pair's demand is inflated by its dark fibers — comparing the
+    result against the *full* per-pair budget then accounts for losses,
+    so existing callers see degraded capacity without changing their
+    comparison."""
+    if health is not None and not health:
+        health = None
     peak = 0
     for r in schedule.rounds:
-        peak = max(peak, _round_fiber_demand(r.pairs_arr, tiles_per_server,
-                                             chips_per_rack=chips_per_rack))
+        if health is None:
+            peak = max(peak, _round_fiber_demand(r.pairs_arr, tiles_per_server,
+                                                 chips_per_rack=chips_per_rack))
+            continue
+        arr = np.asarray(r.pairs_arr, dtype=np.int64).reshape(-1, 2)
+        if chips_per_rack is not None:
+            arr = arr[arr[:, 0] // chips_per_rack
+                      == arr[:, 1] // chips_per_rack]
+        srv = arr // tiles_per_server
+        srv = srv[srv[:, 0] != srv[:, 1]]
+        for pair, demand in _pair_demands(srv).items():
+            peak = max(peak, demand + health.fibers_lost(pair))
     return peak
 
 
-def rail_demand(schedule: Schedule, chips_per_rack: int) -> int:
-    """Peak per-rack-pair rail demand across the schedule's rounds."""
+def rail_demand(schedule: Schedule, chips_per_rack: int, health=None) -> int:
+    """Peak per-rack-pair rail demand across the schedule's rounds
+    (``health`` inflates each pair's demand by its dark rails, like
+    :func:`fiber_demand`)."""
+    if health is not None and not health:
+        health = None
     peak = 0
     for r in schedule.rounds:
-        peak = max(peak, _round_rail_demand(r.pairs_arr, chips_per_rack))
+        if health is None:
+            peak = max(peak, _round_rail_demand(r.pairs_arr, chips_per_rack))
+            continue
+        arr = np.asarray(r.pairs_arr, dtype=np.int64).reshape(-1, 2)
+        rk = arr // chips_per_rack
+        rk = rk[rk[:, 0] != rk[:, 1]]
+        for pair, demand in _pair_demands(rk).items():
+            peak = max(peak, demand + health.rails_lost(pair))
     return peak
 
 

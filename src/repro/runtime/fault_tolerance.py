@@ -16,11 +16,19 @@ and replays the lost shard from a surviving peer — full width survives
 and no checkpoint restore is needed; the shrink path remains the
 fallback when the rack has no spare chip.
 
-Straggler mitigation operates at the circuit level: the scheduler knows
-per-round circuit latencies, and a chip flagged slow gets its round
-partners re-routed through spare wavelengths; at the training-step level
-we model the standard backup-step rule (re-dispatch when a shard exceeds
-``straggler_factor ×`` median step time).
+Straggler mitigation operates at two levels.  At the training-step
+level we model the standard backup-step rule (re-dispatch when a shard
+exceeds ``straggler_factor ×`` median step time,
+:meth:`StragglerPolicy.mitigated_step_time`).  At the circuit level a
+persistently slow chip is a *degraded link* — the same thing as a
+BER-derated transceiver from the fabric's point of view — so
+:func:`straggler_to_degrade` converts detected stragglers into
+``kind="degrade"`` fault events the rack simulator applies through its
+:class:`~repro.core.health.FabricHealth` state: every collective that
+chip joins is re-priced with the derate (the slowest circuit paces the
+round), and spare wavelengths absorb part of the slowdown
+(:meth:`StragglerPolicy.mitigated_derate`).  Repair events model the
+chip recovering (thermal throttle lifting, laser re-locking).
 """
 
 from __future__ import annotations
@@ -168,6 +176,45 @@ class StragglerPolicy:
             return float(shard_times.max())
         # re-dispatched work finishes one median step after the threshold
         return float(max(shard_times[~slow].max(), cap + med))
+
+    def mitigated_derate(self, raw_factor: float) -> float:
+        """The β derate a straggler's circuits carry *after* re-routing
+        part of its traffic through the tile's spare wavelengths: the
+        slowdown above 1 is spread over the original lane plus the
+        spares, so a chip running ``raw_factor×`` slow degrades its
+        rounds by only ``1 + (raw_factor − 1)/(1 + spare_wavelengths)``.
+        Always ≥ 1 and ≤ ``raw_factor``."""
+        if raw_factor <= 1.0:
+            return 1.0
+        return 1.0 + (raw_factor - 1.0) / (1.0 + self.spare_wavelengths)
+
+
+def straggler_to_degrade(time: float, chip_ids: Sequence[int],
+                         shard_times: np.ndarray,
+                         policy: Optional[StragglerPolicy] = None):
+    """Convert one step's straggler detection into fabric ``degrade``
+    fault events the rack simulator replays through its health state
+    (one :class:`~repro.sim.workload.FailureSpec` per slow chip, derated
+    by :meth:`StragglerPolicy.mitigated_derate`).  ``chip_ids[i]`` owns
+    ``shard_times[i]``.  Returns ``[]`` when no shard crosses the
+    backup-step threshold."""
+    from repro.sim.workload import FailureSpec  # deferred: runtime must
+    # stay importable without the simulator package
+    policy = policy or StragglerPolicy()
+    shard_times = np.asarray(shard_times, dtype=float)
+    med = float(np.median(shard_times))
+    if med <= 0:
+        return []
+    out = []
+    slow_mask = policy.detect(shard_times)
+    for i, chip in enumerate(chip_ids):
+        if not slow_mask[i]:
+            continue
+        factor = policy.mitigated_derate(float(shard_times[i]) / med)
+        if factor > 1.0:
+            out.append(FailureSpec(time, (int(chip),), kind="degrade",
+                                   derate=factor))
+    return out
 
 
 def simulate_failures(n_steps: int, n_chips: int, mtbf_steps: float,

@@ -57,13 +57,15 @@ from repro.core import cost_model as cm
 from repro.core.allocator import (AllocationError, BaseAllocator,
                                   PodAllocator, make_allocator)
 from repro.core.fabric import LumorphRack
+from repro.core.health import FabricHealth, OCSRetryPolicy
 from repro.core.policy import Admission, PlacementPolicy, make_policy
 from repro.core.pricing import SchedulePricer
 from repro.core.rack import Pod
 from repro.core.scheduler import (candidate_algos, order_for_locality,
                                   transfer_schedule, transfer_tables_built)
 from repro.morph import MorphConfig, MorphPolicy, PricedMorph, apply_plan
-from repro.runtime.fault_tolerance import reallocate_after_failure
+from repro.runtime.fault_tolerance import (largest_pow2_leq,
+                                           reallocate_after_failure)
 from repro.sim.metrics import SimMetrics, TenantRecord
 from repro.sim.workload import FailureSpec, JobSpec, Trace
 
@@ -91,6 +93,10 @@ def _serve_imports():
 # event-kind priorities for same-timestamp ordering (_WINDOW after _PHASE:
 # a serving window closes only once same-instant training phases settled)
 _FAILURE, _DEPART, _ARRIVAL, _PHASE, _WINDOW = 0, 1, 2, 3, 4
+
+#: stand-in for an inadmissible (inf) serving price: large enough that
+#: the window serves ~nothing, finite so the fluid model stays NaN-free
+_BLACKOUT_S = 1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,7 +230,8 @@ class RackSimulator:
                  rails_per_rack_pair: Optional[int] = None,
                  span_racks: bool = True,
                  serve_autoscale: "AutoscaleConfig | bool | None" = None,
-                 policy: "str | PlacementPolicy | None" = None):
+                 policy: "str | PlacementPolicy | None" = None,
+                 ocs_retry: "OCSRetryPolicy | bool | None" = True):
         if isinstance(discipline, str):
             discipline = make_discipline(discipline)
         self.discipline = discipline
@@ -282,6 +289,28 @@ class RackSimulator:
                 n_servers=max(1, math.ceil(self.n_chips / tiles_per_server)),
                 tiles_per_server=tiles_per_server,
                 fibers_per_server_pair=fibers_per_server_pair)
+        #: fabric health (repro.core.health): the engine owns the one
+        #: mutable health state and shares it with the rack, so the
+        #: vectorized validators, the degraded per-pair fallbacks, and
+        #: the pricer's health-epoch cache suffix all see the same
+        #: faults.  Electrical disciplines stay immortal (fabric faults
+        #: in their traces are ignored — they model no photonic parts).
+        self.health: Optional[FabricHealth] = None
+        if self.discipline.photonic:
+            self.health = FabricHealth()
+            self.rack.health = self.health
+        #: OCS glitch retry/backoff; None stalls establishment until the
+        #: glitch window passes (the no-retry baseline sim_chaos compares)
+        self.ocs_retry: Optional[OCSRetryPolicy] = None
+        if ocs_retry:
+            self.ocs_retry = (ocs_retry if isinstance(ocs_retry,
+                                                      OCSRetryPolicy)
+                              else OCSRetryPolicy())
+        #: fault key → injection time, for MTTR accounting on repair
+        self._fault_started: dict[tuple, float] = {}
+        #: health epoch the last fabric re-plan ran under (no-op repairs
+        #: don't bump the epoch, so they trigger no re-plan churn)
+        self._replanned_epoch = 0
         #: schedule pricer shared by the engine and the morph policy:
         #: bounded LRU on canonical layouts, bound-and-prune candidate
         #: search, hit/miss counters (surfaced in SimMetrics) — see
@@ -380,8 +409,11 @@ class RackSimulator:
                          self._locality(), self._stranded_free())
             self._agg_version = self._layout_version
         allocated, requested, locality, stranded = self._agg
+        degraded = (self.health.degraded_overlap(self.now, time)
+                    if self.health is not None else 0.0)
         self.metrics.advance(time - self.now, allocated, requested,
-                             locality=locality, stranded=stranded)
+                             locality=locality, stranded=stranded,
+                             degraded_s=degraded)
         self.now = time
 
     def _locality(self) -> Optional[float]:
@@ -435,6 +467,17 @@ class RackSimulator:
         return self.pricer.price(algo, chips, n_bytes)
 
     def _collective_s(self, job: _Job) -> float:
+        cost = self._try_collective_s(job)
+        assert cost != float("inf"), \
+            f"no admissible collective for {job.spec.tenant} on {job.chips}"
+        return cost
+
+    def _try_collective_s(self, job: _Job) -> float:
+        """Price the job's per-step collective; unlike
+        :meth:`_collective_s` this may return ``inf`` when the (degraded)
+        fabric admits no schedule on the job's chips — the caller then
+        walks the degradation ladder (:meth:`_replan_job`) instead of
+        asserting."""
         if job.coll_s is not None:
             return job.coll_s
         p = job.width
@@ -471,8 +514,6 @@ class RackSimulator:
                 chips, job.spec.coll_bytes)
         else:
             cost = self._profile_cost_chips(prof, chips)
-        assert cost != float("inf"), \
-            f"no admissible collective for {job.spec.tenant} on {chips}"
         job.coll_s = cost
         return cost
 
@@ -536,15 +577,80 @@ class RackSimulator:
     def _reconfig_window(self, chips: Sequence[int]) -> float:
         """The window to (re-)establish a slice's circuits: the slower
         rail OCS window when the slice spans racks in pod mode (its
-        circuit set then includes rail circuits), else the link's own."""
+        circuit set then includes rail circuits), else the link's own.
+        A live OCS glitch adds retry/backoff delay on top (see
+        :meth:`_ocs_delay`)."""
         reconf = self.discipline.link.reconfig
         if reconf and isinstance(self.rack, Pod):
             reconf = self.rack.reconfig_window(chips, reconf)
+        if reconf and self.health is not None and self.health._glitches:
+            reconf += self._ocs_delay()
         return reconf
+
+    def _ocs_delay(self) -> float:
+        """Extra circuit-establishment latency while an OCS glitch window
+        is live.  With a retry policy, each failed attempt backs off
+        exponentially; a hard (prob = 1) glitch that outlives the whole
+        retry budget *escalates* to a permanent OCS failure — rail loss
+        for a pod-tier switch, ``mzi_failed`` for the rack's own — and
+        repair events are then the only way back.  Without a policy,
+        establishment simply stalls until the window passes."""
+        h = self.health
+        gw = h.active_glitch(self.now)
+        if gw is None:
+            return 0.0
+        pol = self.ocs_retry
+        if pol is None:
+            # no-retry baseline: the OCS controller blocks until the
+            # glitch clears, unbounded by any backoff budget
+            delay = max(0.0, gw.end - self.now)
+            self.metrics.on_ocs(delay, 0.0)
+            return delay
+        if gw.prob >= 1.0:
+            # deterministic failure: walk the backoff ladder; the first
+            # attempt landing past the window's end succeeds
+            delay, backoff, retries = 0.0, pol.backoff_s, 0
+            ok = False
+            for _ in range(pol.max_retries):
+                delay += backoff
+                retries += 1
+                if self.now + delay >= gw.end:
+                    ok = True
+                    break
+                backoff *= pol.multiplier
+            if not ok:
+                self.metrics.ocs_escalations += 1
+                rail_budget = (self.rack.rails_per_rack_pair
+                               if isinstance(self.rack, Pod) else 0)
+                h.escalate_ocs(gw.link, rail_budget=rail_budget)
+                self._invalidate_prices()
+            self.metrics.on_ocs(delay, float(retries))
+            return delay
+        # probabilistic glitch: charge the analytic expectation (the
+        # engine is deterministic — randomness lives in the generators)
+        delay = pol.expected_delay(gw.prob)
+        self.metrics.on_ocs(delay, pol.expected_retries(gw.prob))
+        return delay
+
+    def _invalidate_prices(self) -> None:
+        """Drop every live tenant's memoized prices; each re-prices
+        lazily at its next phase/window (inf routes into
+        :meth:`_replan_job` from :meth:`_on_phase`)."""
+        for job in self._jobs.values():
+            job.ordered = None
+            if job.is_serve:
+                job.prices = None
+            else:
+                job.coll_s = None
 
     # -- handlers ------------------------------------------------------------
     def _on_arrival(self, spec: JobSpec) -> None:
         self.metrics.arrivals += 1
+        if self.health is not None and self.health.mzi_failed:
+            # the rack-tier OCS is down: no new circuits can be built at
+            # all, so admission waits for the repair crew
+            self.metrics.rejected += 1
+            return
         try:
             alloc = self.allocator.allocate(spec.tenant, spec.chips)
         except AllocationError:
@@ -552,6 +658,21 @@ class RackSimulator:
             if spec.chips <= len(self.allocator.free):
                 self.metrics.fragmentation_rejects += 1
             return
+        if (self.health is not None and self.health and spec.serve is None
+                and spec.chips > 1):
+            # degraded fabric: probe the placement before accepting — a
+            # tenant whose only available slice admits no schedule (dead
+            # fibers/rails in every round) would never step
+            probe = _Job(spec=spec,
+                         rec=TenantRecord(tenant=spec.tenant,
+                                          requested=spec.chips,
+                                          arrival=self.now,
+                                          granted=len(alloc.chips)),
+                         chips=alloc.chips)
+            if self._try_collective_s(probe) == float("inf"):
+                self.allocator.release(spec.tenant)
+                self.metrics.rejected += 1
+                return
         self.metrics.accepted += 1
         rec = TenantRecord(tenant=spec.tenant, requested=spec.chips,
                            arrival=self.now, granted=len(alloc.chips))
@@ -586,7 +707,13 @@ class RackSimulator:
         job, epoch = payload
         if not job.alive or epoch != job.epoch:
             return  # stale event from before an eviction or a re-slice
-        coll = self._collective_s(job)
+        coll = self._try_collective_s(job)
+        if coll == float("inf"):
+            # the fabric degraded under this job's feet (e.g. an OCS
+            # escalation invalidated its price lazily): walk the
+            # degradation ladder; the surviving slice replays the step
+            self._replan_job(job)
+            return
         self.metrics.on_collective(job.rec, coll)
         self.metrics.compute_s += job.spec.compute_s
         job.step += 1
@@ -670,7 +797,20 @@ class RackSimulator:
         n_rep = len(job.ordered) // g
         groups = [job.ordered[i * g:(i + 1) * g] for i in range(max(1, n_rep))]
         if job.prices is None:
-            job.prices = self._slice_prices(job, groups)
+            pr = self._slice_prices(job, groups)
+            if not all(math.isfinite(v) for v in
+                       (pr.tp_prefill_s, pr.tp_decode_s, pr.kv_base_s,
+                        pr.kv_per_byte_s)):
+                # the degraded fabric admits no schedule for some replica
+                # block or the KV wave: clamp to a huge finite price so the
+                # fluid window math stays well-defined — the window serves
+                # ~nothing and later repairs/recoveries re-price it
+                pr = serve_model.SlicePrices(
+                    tp_prefill_s=min(pr.tp_prefill_s, _BLACKOUT_S),
+                    tp_decode_s=min(pr.tp_decode_s, _BLACKOUT_S),
+                    kv_base_s=min(pr.kv_base_s, _BLACKOUT_S),
+                    kv_per_byte_s=min(pr.kv_per_byte_s, _BLACKOUT_S))
+            job.prices = pr
         lost = job.penalty_s
         if n_rep < 2:
             # degenerate single-replica slice (post-failure floor): prefill
@@ -851,6 +991,8 @@ class RackSimulator:
         free pool the next proposal sees)."""
         if self.morph is None:
             return
+        if self.health is not None and self.health.mzi_failed:
+            return  # no OCS, no new circuits, no compaction
         for tenant in sorted(self._jobs):
             job = self._jobs[tenant]
             if not job.alive or job.is_serve or job.width <= 1:
@@ -864,7 +1006,163 @@ class RackSimulator:
             if pm is not None:
                 self._commit_morph(job, pm)
 
+    # -- fabric faults (repro.core.health) -----------------------------------
+    def _banks_per_tile(self) -> int:
+        r = self.rack
+        return (r.racks[0] if isinstance(r, Pod) else r) \
+            .servers[0].trx_banks_per_tile
+
+    def _on_fabric_fault(self, fail: FailureSpec) -> None:
+        """Apply one non-chip fault to the health state, then re-plan the
+        tenants it degraded.  A chip that lost its *last* TRX lane is
+        operationally dead and escalates to the chip-failure path (bypass
+        → elastic restart) before the re-plan."""
+        h = self.health
+        self.metrics.fabric_faults += 1
+        self._fault_started.setdefault((fail.kind, fail.link, fail.chips),
+                                       self.now)
+        if fail.kind == "link_fail":
+            h.fail_fibers(fail.link, fail.count)
+        elif fail.kind == "trx_fail":
+            for chip in fail.chips:
+                h.fail_lanes(chip, fail.count)
+            banks = self._banks_per_tile()
+            dead = tuple(c for c in fail.chips
+                         if h.lanes_lost(c) >= banks and c not in self.dead)
+            if dead:
+                self._on_failure(FailureSpec(self.now, dead))
+        elif fail.kind == "rail_fail":
+            h.fail_rails(fail.link, fail.count)
+        elif fail.kind == "degrade":
+            for chip in fail.chips:
+                h.set_derate(chip, fail.derate)
+        elif fail.kind == "ocs_glitch":
+            h.start_glitch(self.now, self.now + fail.duration, fail.prob,
+                           link=fail.link)
+            return  # transient: establishment slows, but no price changes
+        else:
+            raise ValueError(f"unknown fabric fault kind {fail.kind!r}")
+        self._fabric_replan()
+
+    def _on_repair(self, fail: FailureSpec) -> None:
+        """Undo the ``fail.target``-kind fault on the same chips/link.
+        Chips the TRX fault operationally killed stay dead — the repair
+        restores the *fabric* element, not checkpointed tenant state."""
+        h = self.health
+        started = self._fault_started.pop(
+            (fail.target, fail.link, fail.chips), None)
+        if fail.target == "link_fail":
+            h.repair_fibers(fail.link)
+        elif fail.target == "trx_fail":
+            for chip in fail.chips:
+                h.repair_lanes(chip)
+        elif fail.target == "rail_fail":
+            h.repair_rails(fail.link)
+        elif fail.target == "degrade":
+            for chip in fail.chips:
+                h.clear_derate(chip)
+        elif fail.target == "ocs_glitch":
+            h.repair_ocs(fail.link)
+        else:
+            raise ValueError(f"unknown repair target {fail.target!r}")
+        self.metrics.on_repair(None if started is None
+                               else self.now - started)
+        self._fabric_replan()
+
+    def _fabric_replan(self) -> None:
+        """A permanent fault or repair changed what circuits cost:
+        invalidate every live tenant's memoized prices and re-plan the
+        ones the degraded fabric no longer admits.  Repairs that cleared
+        nothing leave the health epoch alone and cost no churn."""
+        h = self.health
+        if h.epoch == self._replanned_epoch:
+            return
+        self._replanned_epoch = h.epoch
+        for tenant in sorted(self._jobs):
+            job = self._jobs.get(tenant)
+            if job is None or not job.alive:
+                continue
+            job.ordered = None
+            if job.is_serve:
+                if job.prices is not None:
+                    job.prices = None  # next window re-prices degraded
+                    self.metrics.on_reroute(job.rec)
+                continue
+            old = job.coll_s
+            job.coll_s = None
+            cost = self._try_collective_s(job)
+            if cost != float("inf"):
+                if old is not None and cost != old:
+                    self.metrics.on_reroute(job.rec)
+                continue
+            self._replan_job(job)
+
+    def _replan_job(self, job: _Job) -> None:
+        """The degradation ladder for a training tenant whose chips admit
+        no schedule: re-pricing on the same chips (the reroute rung)
+        already failed, so (1) morph away from the broken hardware,
+        (2) elastically shrink through powers of two, (3) evict."""
+        if (self.morph is not None
+                and not (self.health is not None and self.health.mzi_failed)):
+            pm = self.morph.propose_compaction(
+                job.spec.tenant, job.chips, job.width, job.spec.coll_bytes,
+                remaining_steps=max(1, job.spec.steps - job.step),
+                free=sorted(self._morph_pool(job)))
+            if pm is not None and pm.new_step_s != float("inf"):
+                self._commit_morph(job, pm)
+                self.metrics.on_reroute(job.rec)
+                if self._try_collective_s(job) != float("inf"):
+                    return  # profiled jobs may still be stuck — fall through
+        self.allocator.release(job.spec.tenant)
+        self._layout_version += 1
+        want = largest_pow2_leq(len(job.chips))
+        while want >= 1:
+            try:
+                alloc = self.allocator.allocate(job.spec.tenant, want)
+            except AllocationError:
+                want = largest_pow2_leq(want - 1) if want > 1 else 0
+                continue
+            job.chips = alloc.chips
+            job.ordered = None
+            job.coll_s = None
+            if self._try_collective_s(job) == float("inf"):
+                # this width still prices inf on the degraded fabric;
+                # narrower slices need fewer circuits per round
+                self.allocator.release(job.spec.tenant)
+                want = largest_pow2_leq(want - 1) if want > 1 else 0
+                continue
+            job.epoch += 1  # cancel events scheduled on the old slice
+            self.metrics.recoveries += 1
+            self.metrics.on_reroute(job.rec)
+            job.rec.shrunk_to = (len(alloc.chips)
+                                 if len(alloc.chips) < job.spec.chips
+                                 else None)
+            reconf = self._reconfig_window(alloc.chips)
+            if reconf:
+                self.metrics.on_reconfig(job.rec, reconf)
+            if job.step >= job.spec.steps:
+                self._push_job(self.now + reconf, _DEPART, job)
+            else:
+                # the in-flight step replays on the surviving slice
+                self._push_job(self.now + reconf + job.spec.compute_s,
+                               _PHASE, job)
+            return
+        job.alive = False
+        job.epoch += 1
+        del self._jobs[job.spec.tenant]
+        job.rec.evicted = True
+        job.rec.end = self.now
+        self.metrics.evicted += 1
+
     def _on_failure(self, fail: FailureSpec) -> None:
+        if getattr(fail, "kind", "chip") != "chip":
+            if self.health is None:
+                return  # electrical fabrics model no photonic plumbing
+            if fail.kind == "repair":
+                self._on_repair(fail)
+            else:
+                self._on_fabric_fault(fail)
+            return
         fresh = [c for c in fail.chips if c not in self.dead]
         if not fresh:
             return
@@ -993,15 +1291,20 @@ def simulate(kind: str, trace: Trace, n_chips: int = 64,
              rails_per_rack_pair: Optional[int] = None,
              serve_autoscale: "AutoscaleConfig | bool | None" = None,
              policy: "str | PlacementPolicy | None" = None,
+             ocs_retry: "OCSRetryPolicy | bool | None" = True,
+             fibers_per_server_pair: Optional[int] = None,
              ) -> SimMetrics:
     """Convenience wrapper: replay ``trace`` on discipline ``kind``
     (``n_racks > 1`` simulates a pod of racks joined by photonic rails)."""
+    kw = {}
+    if fibers_per_server_pair is not None:
+        kw["fibers_per_server_pair"] = fibers_per_server_pair
     return RackSimulator(kind, trace, n_chips=n_chips,
                          check_invariants=check_invariants, morph=morph,
                          n_racks=n_racks, span_racks=span_racks,
                          rails_per_rack_pair=rails_per_rack_pair,
                          serve_autoscale=serve_autoscale,
-                         policy=policy).run()
+                         policy=policy, ocs_retry=ocs_retry, **kw).run()
 
 
 def compare(trace: Trace, kinds: Sequence[str] = ("lumorph", "torus", "sipac"),

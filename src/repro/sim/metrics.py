@@ -35,6 +35,7 @@ class TenantRecord:
     serve_slo_ok: float = 0.0  # of those, how many met both SLOs (analytic)
     scale_ups: int = 0  # autoscaler grow morphs committed
     scale_downs: int = 0  # autoscaler shrink morphs committed
+    reroutes: int = 0  # collectives re-planned around fabric faults
 
     @property
     def jct(self) -> Optional[float]:
@@ -119,6 +120,19 @@ class SimMetrics:
         self._ttft_p50: list[tuple[float, float]] = []
         self._ttft_p99: list[tuple[float, float]] = []
         self._tpot: list[tuple[float, float]] = []
+        # fabric health (repro.core.health) — kept out of summary() like
+        # the serving/pricing blocks; read them via chaos_summary()
+        self.fabric_faults = 0  # fabric fault events applied
+        self.fabric_repairs = 0  # repair events applied
+        self.repair_s_total = 0.0  # fault→repair downtime (matched pairs)
+        self._matched_repairs = 0
+        self.degraded_s = 0.0  # ∫ dt while any fault or glitch is live
+        self.degraded_goodput_chip_seconds = 0.0  # goodput earned degraded
+        self.reroutes = 0  # collectives re-planned around a fault
+        self.ocs_retries = 0.0  # circuit-establishment retries (expected)
+        self.ocs_delay_s = 0.0  # establishment delay added by glitches
+        self.ocs_escalations = 0  # retry-exhausted glitches made permanent
+        self._ocs_delay_samples: list[float] = []
         # per-tenant
         self.tenants: dict[str, TenantRecord] = {}
         self._collective_samples = 0
@@ -126,12 +140,13 @@ class SimMetrics:
     # -- integrals -----------------------------------------------------------
     def advance(self, dt: float, allocated: int, requested: int,
                 locality: Optional[float] = None,
-                stranded: int = 0) -> None:
+                stranded: int = 0, degraded_s: float = 0.0) -> None:
         """Advance the clock by ``dt`` with ``allocated`` chips held by
         tenants that requested ``requested`` chips in total.  ``locality``
         is the live tenants' mean span ratio (None when no tenant is
         live); ``stranded`` counts scattered free chips (see
-        :attr:`stranded_chip_seconds`)."""
+        :attr:`stranded_chip_seconds`); ``degraded_s`` is how much of
+        ``dt`` the fabric spent with a live fault or glitch."""
         if dt <= 0:
             return
         self.util_integral += dt * (allocated / self.n_chips if self.n_chips else 0.0)
@@ -142,6 +157,9 @@ class SimMetrics:
             self.locality_integral += dt * locality
             self.locality_time += dt
         self.stranded_chip_seconds += dt * stranded
+        if degraded_s > 0.0:
+            self.degraded_s += degraded_s
+            self.degraded_goodput_chip_seconds += degraded_s * requested
 
     # -- phase accounting ----------------------------------------------------
     def on_collective(self, rec: TenantRecord, seconds: float) -> None:
@@ -201,6 +219,30 @@ class SimMetrics:
             self._tpot.append((stats.requests, stats.tpot_s))
         rec.serve_requests += stats.requests
         rec.serve_slo_ok += stats.slo_ok
+
+    def on_reroute(self, rec: TenantRecord) -> None:
+        """One collective re-planned (re-priced or re-routed) because a
+        fabric fault or repair changed what its circuits cost."""
+        self.reroutes += 1
+        rec.reroutes += 1
+
+    def on_repair(self, downtime_s: Optional[float]) -> None:
+        """One repair event applied; ``downtime_s`` is the fault→repair
+        interval when the matching fault was seen this run (None for
+        repairs of already-cleared state, which count but carry no MTTR
+        sample)."""
+        self.fabric_repairs += 1
+        if downtime_s is not None:
+            self.repair_s_total += downtime_s
+            self._matched_repairs += 1
+
+    def on_ocs(self, delay_s: float, retries: float) -> None:
+        """One circuit-establishment attempt that hit a live OCS glitch:
+        ``delay_s`` of retry/backoff (or stall) charged, ``retries``
+        expected re-attempts."""
+        self.ocs_delay_s += delay_s
+        self.ocs_retries += retries
+        self._ocs_delay_samples.append(delay_s)
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -292,6 +334,50 @@ class SimMetrics:
             GOODPUT_PER_CHIP_S: round(goodput, 9),
             "kv_handoff_bytes": round(self.kv_handoff_bytes, 3),
             "kv_handoff_s": round(self.kv_handoff_s, 9),
+        }
+
+    @property
+    def availability(self) -> float:
+        """Fraction of the run the fabric was fully healthy (no permanent
+        fault, no live glitch window)."""
+        if not self.horizon:
+            return 1.0
+        return max(0.0, 1.0 - self.degraded_s / self.horizon)
+
+    @property
+    def mttr_s(self) -> float:
+        """Mean fault→repair interval over repairs whose fault was
+        observed this run."""
+        return (self.repair_s_total / self._matched_repairs
+                if self._matched_repairs else 0.0)
+
+    @property
+    def ocs_delay_p99_s(self) -> float:
+        """Nearest-rank p99 of per-establishment glitch delay samples."""
+        if not self._ocs_delay_samples:
+            return 0.0
+        ordered = sorted(self._ocs_delay_samples)
+        k = max(0, -(-len(ordered) * 99 // 100) - 1)  # ceil(.99 n) - 1
+        return ordered[k]
+
+    def chaos_summary(self) -> dict:
+        """Fabric-health metrics (repro.core.health) — a separate method,
+        like :meth:`pricing_summary`/:meth:`serve_summary`, so
+        :meth:`summary` and the golden fixtures built on it stay
+        byte-identical for fault-free runs."""
+        return {
+            "fabric_faults": self.fabric_faults,
+            "repairs": self.fabric_repairs,
+            "degraded_s": round(self.degraded_s, 6),
+            "availability": round(self.availability, 6),
+            "mttr_s": round(self.mttr_s, 6),
+            "reroutes": self.reroutes,
+            "retries": round(self.ocs_retries, 6),
+            "ocs_escalations": self.ocs_escalations,
+            "ocs_delay_s": round(self.ocs_delay_s, 9),
+            "ocs_delay_p99_s": round(self.ocs_delay_p99_s, 9),
+            "degraded_goodput_chip_seconds":
+                round(self.degraded_goodput_chip_seconds, 3),
         }
 
     @property

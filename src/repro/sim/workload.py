@@ -215,12 +215,59 @@ class JobSpec:
     serve: Optional[ServeSpec] = None
 
 
+#: Fault kinds a FailureSpec may carry.  ``chip`` is the classic
+#: whole-chip kill; the fabric kinds (PR 10) hit the photonic plumbing
+#: instead — see ``repro.core.health`` — and ``repair`` undoes an
+#: earlier fault (``target`` names which kind).
+FAULT_KINDS = ("chip", "link_fail", "trx_fail", "rail_fail", "degrade",
+               "ocs_glitch", "repair")
+
+
 @dataclasses.dataclass(frozen=True)
 class FailureSpec:
-    """Chips that die (permanently) at ``time``."""
+    """One fault event at ``time``.
+
+    ``kind`` selects what breaks (:data:`FAULT_KINDS`):
+
+      * ``chip`` — ``chips`` die permanently (the classic event; all
+        other fields are ignored and never serialized).
+      * ``link_fail`` — ``count`` fibers between server pair ``link``
+        go dark.
+      * ``trx_fail`` — ``count`` TRX lanes on each of ``chips`` die
+        (a chip losing its last lane is operationally dead).
+      * ``rail_fail`` — ``count`` rails between rack pair ``link``
+        go dark (pod mode).
+      * ``degrade`` — ``chips``' circuits run ``derate×`` slower
+        (BER climb / laser drift).
+      * ``ocs_glitch`` — for ``duration`` seconds, circuit
+        establishment through the OCS (rack pair ``link``, or the
+        rack's own mesh when ``link`` is None) fails with probability
+        ``prob`` per attempt.
+      * ``repair`` — undo the earlier ``target``-kind fault on the same
+        ``chips``/``link`` (MTTR-driven; generators schedule one per
+        permanent fault).
+    """
 
     time: float
-    chips: tuple[int, ...]
+    chips: tuple[int, ...] = ()
+    kind: str = "chip"
+    link: Optional[tuple[int, int]] = None
+    count: int = 1
+    derate: float = 1.0
+    duration: float = 0.0
+    prob: float = 1.0
+    target: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "chips", tuple(self.chips))
+        if self.link is not None:
+            object.__setattr__(self, "link", tuple(self.link))
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {FAULT_KINDS}")
+        if self.kind == "repair" and self.target not in FAULT_KINDS:
+            raise ValueError(f"repair target must name a fault kind, "
+                             f"got {self.target!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,8 +296,25 @@ class Trace:
                 del rec["serve"]
             lines.append(json.dumps({"type": "job", **rec}))
         for f in self.failures:
-            lines.append(json.dumps({"type": "failure", "time": f.time,
-                                     "chips": list(f.chips)}))
+            rec = {"type": "failure", "time": f.time, "chips": list(f.chips)}
+            if f.kind != "chip":
+                # fabric faults carry only their non-default fields, so
+                # pre-chaos chip-failure traces stay byte-identical (same
+                # contract as the profile/serve keys above)
+                rec["kind"] = f.kind
+                if f.link is not None:
+                    rec["link"] = list(f.link)
+                if f.count != 1:
+                    rec["count"] = f.count
+                if f.derate != 1.0:
+                    rec["derate"] = f.derate
+                if f.duration != 0.0:
+                    rec["duration"] = f.duration
+                if f.prob != 1.0:
+                    rec["prob"] = f.prob
+                if f.target:
+                    rec["target"] = f.target
+            lines.append(json.dumps(rec))
         return "\n".join(lines) + "\n"
 
     @classmethod
@@ -272,7 +336,16 @@ class Trace:
                     serve = ServeSpec.from_json(serve)
                 jobs.append(JobSpec(profile=prof, serve=serve, **rec))
             elif kind == "failure":
-                failures.append(FailureSpec(rec["time"], tuple(rec["chips"])))
+                link = rec.get("link")
+                failures.append(FailureSpec(
+                    rec["time"], tuple(rec["chips"]),
+                    kind=rec.get("kind", "chip"),
+                    link=None if link is None else tuple(link),
+                    count=int(rec.get("count", 1)),
+                    derate=float(rec.get("derate", 1.0)),
+                    duration=float(rec.get("duration", 0.0)),
+                    prob=float(rec.get("prob", 1.0)),
+                    target=rec.get("target", "")))
             else:
                 raise ValueError(f"unknown trace event type {kind!r}")
         return cls(tuple(jobs), tuple(failures))
@@ -477,3 +550,136 @@ def failure_injection_trace(*, n_chips: int = 64, seed: int = 0) -> Trace:
     failures = [FailureSpec(time=10.0, chips=dead[:3]),
                 FailureSpec(time=20.0, chips=dead[3:])]
     return Trace(tuple(jobs), tuple(failures))
+
+
+# ---------------------------------------------------------------------------
+# Fabric chaos (PR 10)
+# ---------------------------------------------------------------------------
+
+def chaos_trace(n_events: int = 60, *, n_chips: int = 64,
+                tiles_per_server: int = 8, mean_lifetime: float = 60.0,
+                compute_s: float = 6.0, coll_bytes: float = float(4 << 20),
+                link_fail_rate: float = 0.02, trx_fail_rate: float = 0.01,
+                degrade_rate: float = 0.01, max_fibers_cut: int = 4,
+                max_lanes_cut: int = 2, derate: float = 2.0,
+                mttr: float = 40.0, seed: int = 0) -> Trace:
+    """Fig 2a churn plus fabric chaos: Poisson fiber-bundle cuts between
+    random server pairs, TRX-lane deaths on random chips, and BER-style
+    ``derate``× circuit slowdowns, each followed by a ``repair`` event an
+    exponential(``mttr``) later.  Jobs are drawn before faults, so the
+    degraded-mode run and its :func:`fail_stop_trace` counterpart see a
+    byte-identical tenant sequence for any seed."""
+    rng = np.random.RandomState(seed)
+    jobs = []
+    for t in range(n_events):
+        k = fig2a_size_sampler(rng)
+        lifetime = float(int(rng.exponential(mean_lifetime)) + 1)
+        steps = max(1, int(round(lifetime / compute_s)))
+        jobs.append(JobSpec(tenant=f"t{t}", arrival=float(t), chips=k,
+                            steps=steps, compute_s=compute_s,
+                            coll_bytes=coll_bytes))
+    horizon = float(n_events)
+    n_servers = max(2, n_chips // tiles_per_server)
+    failures: list[FailureSpec] = []
+
+    def with_repair(fail: FailureSpec) -> None:
+        failures.append(fail)
+        rt = round(fail.time + rng.exponential(mttr), 6)
+        failures.append(FailureSpec(rt, fail.chips, kind="repair",
+                                    link=fail.link, target=fail.kind))
+
+    def rand_pair(n: int) -> tuple[int, int]:
+        a = int(rng.randint(n))
+        b = int(rng.randint(n - 1))
+        if b >= a:
+            b += 1
+        return (min(a, b), max(a, b))
+
+    ft = 0.0
+    while link_fail_rate > 0:
+        ft += rng.exponential(1.0 / link_fail_rate)
+        if ft >= horizon:
+            break
+        with_repair(FailureSpec(round(ft, 6), (), kind="link_fail",
+                                link=rand_pair(n_servers),
+                                count=int(rng.randint(max_fibers_cut)) + 1))
+    ft = 0.0
+    while trx_fail_rate > 0:
+        ft += rng.exponential(1.0 / trx_fail_rate)
+        if ft >= horizon:
+            break
+        chip = int(rng.randint(n_chips))
+        with_repair(FailureSpec(round(ft, 6), (chip,), kind="trx_fail",
+                                count=int(rng.randint(max_lanes_cut)) + 1))
+    ft = 0.0
+    while degrade_rate > 0:
+        ft += rng.exponential(1.0 / degrade_rate)
+        if ft >= horizon:
+            break
+        chip = int(rng.randint(n_chips))
+        with_repair(FailureSpec(round(ft, 6), (chip,), kind="degrade",
+                                derate=derate))
+    failures.sort(key=lambda f: f.time)
+    return Trace(tuple(jobs), tuple(failures))
+
+
+def glitch_storm_trace(n_events: int = 40, *, n_chips: int = 64,
+                       mean_lifetime: float = 60.0, compute_s: float = 6.0,
+                       coll_bytes: float = float(4 << 20),
+                       glitch_every: float = 8.0,
+                       glitch_duration: float = 4.0,
+                       glitch_prob: float = 0.5, seed: int = 0) -> Trace:
+    """Fig 2a churn under a storm of *transient* OCS faults: every
+    ``glitch_every`` time units circuit establishment fails with
+    per-attempt probability ``glitch_prob`` for ``glitch_duration``
+    seconds.  No permanent faults, so the p99 establishment-latency claim
+    isolates the retry/backoff path."""
+    rng = np.random.RandomState(seed)
+    jobs = []
+    for t in range(n_events):
+        k = fig2a_size_sampler(rng)
+        lifetime = float(int(rng.exponential(mean_lifetime)) + 1)
+        steps = max(1, int(round(lifetime / compute_s)))
+        jobs.append(JobSpec(tenant=f"t{t}", arrival=float(t), chips=k,
+                            steps=steps, compute_s=compute_s,
+                            coll_bytes=coll_bytes))
+    failures = []
+    t = 1.0
+    while t < float(n_events):
+        failures.append(FailureSpec(round(t, 6), (), kind="ocs_glitch",
+                                    duration=glitch_duration,
+                                    prob=glitch_prob))
+        t += glitch_every
+    return Trace(tuple(jobs), tuple(failures))
+
+
+def fail_stop_trace(trace: Trace, *, tiles_per_server: int = 8,
+                    chips_per_rack: Optional[int] = None) -> Trace:
+    """The fail-stop counterpart of a fabric-fault trace: every fabric
+    fault is recast as permanently killing all chips that touch the broken
+    element — both servers of a dark fiber bundle, both racks of a dark
+    rail pair, the TRX-hit or derated chips themselves.  Repairs and
+    transient glitches are dropped (fail-stop hardware never comes back).
+    Replaying this on the same engine is the baseline the degraded-mode
+    goodput claim compares against."""
+    failures = []
+    for f in trace.failures:
+        if f.kind == "chip":
+            failures.append(f)
+            continue
+        if f.kind in ("repair", "ocs_glitch"):
+            continue
+        if f.kind == "link_fail":
+            assert f.link is not None
+            chips = [c for s in f.link
+                     for c in range(s * tiles_per_server,
+                                    (s + 1) * tiles_per_server)]
+        elif f.kind == "rail_fail":
+            assert f.link is not None and chips_per_rack is not None
+            chips = [c for r in f.link
+                     for c in range(r * chips_per_rack,
+                                    (r + 1) * chips_per_rack)]
+        else:  # trx_fail, degrade
+            chips = list(f.chips)
+        failures.append(FailureSpec(f.time, tuple(chips)))
+    return Trace(trace.jobs, tuple(failures))

@@ -1,0 +1,409 @@
+"""Fabric fault injection + degraded-mode operation (repro.core.health).
+
+Covers the PR-10 contracts:
+
+  * a fault-free ``FabricHealth`` is *invisible*: pricing keys, prices,
+    and whole-simulation summaries are bit-identical to a rack with no
+    health at all (the golden fixtures stay pinned);
+  * under any health state the pruned/canonical pricer stays *exact*
+    (bound-and-prune never loses the winner: faults only raise prices);
+  * the engine's degradation ladder (reroute → morph-away → elastic
+    shrink → evict), MTTR repairs, OCS glitch retry/backoff with
+    escalation, and the availability metrics;
+  * straggler mitigation wired through the degraded-link path.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.fabric import CircuitError, LumorphRack
+from repro.core.health import FabricHealth, OCSRetryPolicy
+from repro.core.pricing import SchedulePricer
+from repro.core.rack import Pod
+from repro.core.scheduler import (build_schedule, fiber_demand,
+                                  order_for_locality)
+from repro.runtime.fault_tolerance import (StragglerPolicy,
+                                           straggler_to_degrade)
+from repro.sim import Trace, simulate
+from repro.sim.workload import (FailureSpec, JobSpec, chaos_trace,
+                                fail_stop_trace, glitch_storm_trace)
+
+ALGOS = ("ring", "lumorph2", "lumorph4")
+
+
+def _rack(fibers: int = 2) -> LumorphRack:
+    return LumorphRack(n_servers=8, tiles_per_server=8,
+                       fibers_per_server_pair=fibers)
+
+
+def _pricer(rack) -> SchedulePricer:
+    return SchedulePricer(link=cm.LUMORPH_LINK, rack=rack,
+                          tiles_per_server=8)
+
+
+# ---------------------------------------------------------------------------
+# FabricHealth model
+# ---------------------------------------------------------------------------
+
+def test_health_truthiness_and_epoch():
+    h = FabricHealth()
+    assert not h and h.epoch == 0
+    h.fail_fibers((0, 1), 2)
+    assert h and h.fibers_lost((1, 0)) == 2  # pair order normalized
+    e = h.epoch
+    h.repair_fibers((0, 1))
+    assert not h and h.epoch > e
+    # repairing a healthy element changes nothing (no epoch churn)
+    e = h.epoch
+    h.repair_fibers((0, 1))
+    h.repair_lanes(5)
+    h.clear_derate(3)
+    assert h.epoch == e
+    # glitches never make the fabric truthy and never bump the epoch
+    h.start_glitch(1.0, 2.0, 0.5)
+    assert not h and h.epoch == e
+
+
+def test_health_degraded_overlap_merges_windows():
+    h = FabricHealth()
+    h.start_glitch(1.0, 3.0, 0.5)
+    h.start_glitch(2.0, 4.0, 1.0)  # overlaps the first
+    h.start_glitch(6.0, 7.0, 0.5)  # disjoint
+    assert h.degraded_overlap(0.0, 10.0) == pytest.approx(4.0)
+    assert h.degraded_overlap(2.5, 3.5) == pytest.approx(1.0)
+    assert h.degraded_overlap(8.0, 9.0) == 0.0
+    # a permanent fault degrades the whole interval
+    h.fail_lanes(0)
+    assert h.degraded_overlap(0.0, 10.0) == pytest.approx(10.0)
+
+
+def test_health_escalation_retires_glitches():
+    h = FabricHealth()
+    h.start_glitch(0.0, 50.0, 1.0, link=(0, 1))
+    h.start_glitch(0.0, 50.0, 1.0)  # rack-tier
+    h.escalate_ocs((0, 1), rail_budget=4)
+    assert h.rails_lost((0, 1)) == 4
+    assert h.active_glitch(1.0) is not None  # rack-tier window remains
+    h.escalate_ocs(None)
+    assert h.mzi_failed and h.active_glitch(1.0) is None
+    h.repair_ocs(None)
+    h.repair_ocs((0, 1))
+    assert not h.mzi_failed and not h
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_ocs_retry_delay_monotone_and_bounded(p_lo, p_hi):
+    """Expected retry/backoff delay is monotone in the glitch probability
+    and never exceeds the policy's total backoff budget — the bound the
+    sim_chaos p99 claim leans on."""
+    pol = OCSRetryPolicy(max_retries=5, backoff_s=25e-6, multiplier=2.0)
+    lo, hi = min(p_lo, p_hi), max(p_lo, p_hi)
+    assert pol.expected_delay(lo) <= pol.expected_delay(hi) + 1e-18
+    assert pol.expected_delay(hi) <= pol.total_backoff_s + 1e-18
+    assert pol.expected_retries(hi) <= pol.max_retries
+
+
+# ---------------------------------------------------------------------------
+# Degraded validation + pricing
+# ---------------------------------------------------------------------------
+
+def test_validate_round_respects_dead_fibers():
+    rack = _rack(fibers=2)
+    # two circuits crossing servers 0-1 fit the 2-fiber budget
+    pairs = [(0, 8), (1, 9)]
+    rack.validate_round(pairs)
+    h = FabricHealth()
+    rack.health = h
+    h.fail_fibers((0, 1))  # server pair: one fiber left
+    with pytest.raises(CircuitError, match="healthy"):
+        rack.validate_round(pairs)
+    rack.validate_round([(0, 8)])  # one circuit still fits
+    h.repair_fibers((0, 1))
+    rack.validate_round(pairs)
+
+
+def test_validate_round_respects_dead_lanes():
+    rack = LumorphRack(n_servers=1, tiles_per_server=8, trx_banks_per_tile=3)
+    pairs = [(0, 1), (0, 2), (0, 3)]
+    rack.validate_round(pairs)
+    h = FabricHealth()
+    rack.health = h
+    h.fail_lanes(0, 1)  # chip 0 has 2 healthy banks left
+    with pytest.raises(CircuitError, match="TRX"):
+        rack.validate_round(pairs)
+    rack.validate_round([(0, 1), (0, 2)])
+
+
+def test_pod_validate_round_respects_dead_rails():
+    pod = Pod(n_racks=2, chips_per_rack=32, tiles_per_server=8,
+              rails_per_rack_pair=2)
+    pairs = [(0, 32), (1, 33)]  # two rack-crossing circuits
+    pod.validate_round(pairs)
+    h = FabricHealth()
+    pod.health = h
+    h.fail_rails((0, 1), 1)
+    with pytest.raises(CircuitError, match="rails"):
+        pod.validate_round(pairs)
+    pod.validate_round([(0, 32)])
+
+
+def test_fault_free_health_prices_bit_identical():
+    """A pricer on a rack with an attached fault-free FabricHealth must
+    produce the same cache keys and the same prices as one with no
+    health at all — the invisibility contract the goldens rely on."""
+    chips = tuple(order_for_locality(tuple(range(16)), 8))
+    bare = _rack()
+    healthy = _rack()
+    healthy.health = FabricHealth()
+    p_bare, p_health = _pricer(bare), _pricer(healthy)
+    for algo in ALGOS:
+        assert p_bare.price(algo, chips, 1e6) == \
+            p_health.price(algo, chips, 1e6)
+    assert p_bare.cache_key_chips(chips) == p_health.cache_key_chips(chips)
+    assert list(p_bare._cache) == list(p_health._cache)  # identical keys
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_pruned_pricing_exact_under_any_health_state(seed):
+    """Bound-and-prune + canonical caching stay *exact* under arbitrary
+    faults: the pricer's cheapest() equals the brute-force minimum of
+    directly-built schedule costs on the same degraded rack.  Also:
+    repairing everything returns prices bit-identical to the pre-fault
+    baseline (epoch-keyed entries never leak across health states)."""
+    rng = np.random.RandomState(seed)
+    rack = _rack(fibers=2)
+    rack.health = h = FabricHealth()
+    pricer = _pricer(rack)
+    chips = tuple(order_for_locality(
+        tuple(int(c) for c in rng.choice(64, size=16, replace=False)), 8))
+    n_bytes = float(1 << 20)
+    baseline = pricer.cheapest(ALGOS, chips, n_bytes)
+
+    # inject 1-3 random faults (fibers, lanes, derates)
+    for _ in range(int(rng.randint(1, 4))):
+        kind = rng.randint(3)
+        if kind == 0:
+            a, b = rng.choice(8, size=2, replace=False)
+            h.fail_fibers((int(a), int(b)), int(rng.randint(1, 3)))
+        elif kind == 1:
+            h.fail_lanes(int(rng.randint(64)), int(rng.randint(1, 3)))
+        else:
+            h.set_derate(int(rng.randint(64)), 1.0 + float(rng.random()) * 3)
+
+    degraded = pricer.cheapest(ALGOS, chips, n_bytes)
+    direct = min(build_schedule(a, chips, n_bytes)
+                 .cost(cm.LUMORPH_LINK, rack=rack) for a in ALGOS)
+    if math.isinf(direct):
+        assert math.isinf(degraded)
+    else:
+        assert degraded == pytest.approx(direct, rel=1e-12)
+    assert degraded >= baseline  # faults only ever raise prices
+
+    # full repair: back to the canonical fast path, bit-identical
+    for pair in list(h._dead_fibers):
+        h.repair_fibers(pair)
+    for chip in list(h._dead_lanes):
+        h.repair_lanes(chip)
+    for chip in list(h._derate):
+        h.clear_derate(chip)
+    assert not h
+    assert pricer.cheapest(ALGOS, chips, n_bytes) == baseline
+
+
+def test_derate_multiplies_beta_only():
+    rack = _rack(fibers=8)
+    rack.health = h = FabricHealth()
+    pricer = _pricer(rack)
+    chips = tuple(range(16))
+    base = pricer.price("lumorph2", chips, float(4 << 20))
+    h.set_derate(3, 2.0)
+    degraded = pricer.price("lumorph2", chips, float(4 << 20))
+    assert base < degraded <= 2.0 * base  # α unchanged, β doubled
+    h.clear_derate(3)
+    assert pricer.price("lumorph2", chips, float(4 << 20)) == base
+
+
+def test_fiber_demand_inflated_by_losses():
+    chips = tuple(range(16))
+    sched = build_schedule("lumorph2", chips, 1e6)
+    base = fiber_demand(sched, 8)
+    h = FabricHealth()
+    h.fail_fibers((0, 1), 3)
+    assert fiber_demand(sched, 8, health=h) >= base
+    assert fiber_demand(sched, 8, health=FabricHealth()) == base
+
+
+# ---------------------------------------------------------------------------
+# Engine: degraded-mode operation
+# ---------------------------------------------------------------------------
+
+def _one_tenant(faults, steps=20, chips=16):
+    return Trace((JobSpec("t0", 0.0, chips, steps=steps, compute_s=1.0,
+                          coll_bytes=float(1 << 20)),), tuple(faults))
+
+
+def test_degrade_fault_slows_then_repair_restores():
+    base = simulate("lumorph", _one_tenant(()), n_chips=64).tenants["t0"]
+    hit = simulate("lumorph", _one_tenant(
+        (FailureSpec(5.0, (0,), kind="degrade", derate=4.0),
+         FailureSpec(12.0, (0,), kind="repair", target="degrade"))),
+        n_chips=64)
+    rec = hit.tenants["t0"]
+    assert rec.collective_s > base.collective_s
+    assert rec.collective_s <= 4.0 * base.collective_s
+    assert hit.fabric_faults == 1 and hit.fabric_repairs == 1
+    assert hit.mttr_s == pytest.approx(7.0)
+    assert hit.reroutes >= 1  # price changed on a live tenant
+    assert hit.degraded_s > 0 and hit.availability < 1.0
+
+
+def test_link_fail_triggers_degradation_ladder():
+    """Killing the whole fiber budget between the tenant's two servers
+    makes its schedule inadmissible: the engine must keep the tenant
+    alive (morph away or shrink), never crash on the inf price."""
+    trace = _one_tenant(
+        (FailureSpec(5.0, (), kind="link_fail", link=(0, 1), count=2),),
+        steps=30)
+    m = simulate("lumorph", trace, n_chips=64, morph=True,
+                 fibers_per_server_pair=2)
+    rec = m.tenants["t0"]
+    assert not rec.evicted
+    assert rec.steps_done > 0
+    assert m.reroutes >= 1
+    assert m.fabric_faults == 1
+
+
+def test_trx_exhaustion_escalates_to_chip_failure():
+    trace = _one_tenant(
+        (FailureSpec(5.0, (0,), kind="trx_fail", count=4),), steps=30)
+    m = simulate("lumorph", trace, n_chips=64)
+    assert m.failures_injected == 1  # the chip died operationally
+    assert m.fabric_faults == 1
+    assert m.recoveries >= 1  # spare chips absorb it, full width kept
+    rec = m.tenants["t0"]
+    assert not rec.evicted and rec.completed
+
+
+def test_hard_glitch_escalates_and_blocks_admission():
+    jobs = (JobSpec("t0", 0.0, 8, steps=50, compute_s=1.0),
+            JobSpec("t1", 2.0, 8, steps=5, compute_s=1.0),
+            JobSpec("t2", 3.0, 8, steps=5, compute_s=1.0),
+            JobSpec("t3", 11.0, 8, steps=5, compute_s=1.0))
+    faults = (FailureSpec(1.0, (), kind="ocs_glitch", duration=8.0,
+                          prob=1.0),
+              FailureSpec(10.0, (), kind="repair", target="ocs_glitch"))
+    m = simulate("lumorph", Trace(jobs, faults), n_chips=64)
+    # t1's establishment at 2.0 exhausts the retry budget inside the
+    # 8-second hard window → escalation → t2 rejected, t3 (post-repair)
+    # accepted
+    assert m.ocs_escalations == 1
+    assert m.rejected == 1
+    assert "t3" in m.tenants and not m.tenants["t3"].evicted
+    assert m.fabric_repairs == 1
+
+
+def test_no_retry_policy_stalls_through_glitch():
+    jobs = (JobSpec("t0", 2.0, 8, steps=3, compute_s=1.0),)
+    faults = (FailureSpec(1.0, (), kind="ocs_glitch", duration=4.0,
+                          prob=0.5),)
+    retry = simulate("lumorph", Trace(jobs, faults), n_chips=64)
+    stall = simulate("lumorph", Trace(jobs, faults), n_chips=64,
+                     ocs_retry=None)
+    assert retry.ocs_delay_s > 0
+    assert stall.ocs_delay_s > retry.ocs_delay_s  # stalls to window end
+    assert retry.ocs_delay_p99_s <= OCSRetryPolicy().total_backoff_s
+
+
+def test_electrical_disciplines_ignore_fabric_faults():
+    trace = chaos_trace(20, n_chips=64, seed=3)
+    m = simulate("torus", trace, n_chips=64)
+    c = m.chaos_summary()
+    assert c["fabric_faults"] == 0 and c["repairs"] == 0
+    assert c["degraded_s"] == 0 and c["availability"] == 1.0
+
+
+def test_chaos_simulation_deterministic():
+    trace = chaos_trace(30, n_chips=64, seed=11)
+    a = simulate("lumorph", trace, n_chips=64, morph=True)
+    b = simulate("lumorph", trace, n_chips=64, morph=True)
+    assert a.summary() == b.summary()
+    assert a.chaos_summary() == b.chaos_summary()
+
+
+def test_degraded_beats_failstop_on_chaos():
+    trace = chaos_trace(60, n_chips=64, link_fail_rate=0.05,
+                        trx_fail_rate=0.02, degrade_rate=0.02,
+                        max_fibers_cut=2, mttr=30.0, seed=0)
+    deg = simulate("lumorph", trace, n_chips=64, morph=True,
+                   fibers_per_server_pair=2)
+    fs = simulate("lumorph", fail_stop_trace(trace), n_chips=64, morph=True,
+                  fibers_per_server_pair=2)
+    assert deg.goodput_chip_seconds > fs.goodput_chip_seconds
+    assert deg.acceptance_rate >= fs.acceptance_rate
+
+
+def test_glitch_storm_bounded_p99():
+    trace = glitch_storm_trace(40, glitch_every=6.0, glitch_duration=3.0,
+                               glitch_prob=0.5, seed=1)
+    m = simulate("lumorph", trace, n_chips=64, morph=True)
+    assert m.ocs_retries > 0
+    assert m.ocs_delay_p99_s <= OCSRetryPolicy().total_backoff_s
+
+
+def test_conservation_holds_under_chaos():
+    """The chip-conservation invariant is checked after every event with
+    check_invariants=True (the default) — a full chaos run exercising
+    every fault kind must never trip it."""
+    trace = chaos_trace(40, n_chips=64, link_fail_rate=0.1,
+                        trx_fail_rate=0.05, degrade_rate=0.05, seed=5)
+    m = simulate("lumorph", trace, n_chips=64, morph=True,
+                 fibers_per_server_pair=2)
+    assert m.events > 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation through the degraded-link path
+# ---------------------------------------------------------------------------
+
+def test_mitigated_derate_bounds():
+    pol = StragglerPolicy(straggler_factor=2.0, spare_wavelengths=2)
+    assert pol.mitigated_derate(1.0) == 1.0
+    assert pol.mitigated_derate(0.5) == 1.0
+    assert pol.mitigated_derate(4.0) == pytest.approx(2.0)  # (4-1)/3 + 1
+    assert 1.0 < pol.mitigated_derate(3.0) < 3.0
+
+
+def test_straggler_to_degrade_detection():
+    times = np.array([1.0, 1.0, 1.0, 4.0])
+    specs = straggler_to_degrade(7.5, (10, 11, 12, 13), times)
+    assert len(specs) == 1
+    f = specs[0]
+    assert f.kind == "degrade" and f.chips == (13,) and f.time == 7.5
+    assert 1.0 < f.derate < 4.0  # spare wavelengths absorb part of it
+    assert straggler_to_degrade(0.0, (1, 2), np.array([1.0, 1.5])) == []
+
+
+def test_straggler_degrade_round_trips_through_engine():
+    """The full wiring: a detected straggler becomes a degrade fault the
+    engine replays — the tenant's collectives slow down by at most the
+    mitigated factor, and a repair restores the baseline price."""
+    pol = StragglerPolicy(straggler_factor=2.0, spare_wavelengths=2)
+    times = np.array([1.0] * 15 + [7.0])
+    specs = straggler_to_degrade(5.0, tuple(range(16)), times, pol)
+    assert len(specs) == 1 and specs[0].chips == (15,)
+    repair = FailureSpec(12.0, specs[0].chips, kind="repair",
+                         target="degrade")
+    base = simulate("lumorph", _one_tenant(()), n_chips=64).tenants["t0"]
+    hit = simulate("lumorph", _one_tenant(tuple(specs) + (repair,)),
+                   n_chips=64)
+    rec = hit.tenants["t0"]
+    assert rec.collective_s > base.collective_s
+    assert rec.collective_s <= specs[0].derate * base.collective_s
+    assert hit.reroutes >= 1 and hit.fabric_repairs == 1

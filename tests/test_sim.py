@@ -150,9 +150,16 @@ def test_trace_jsonl_roundtrip_lossless(seed, failure_rate):
     (arrival, steps, compute_s, coll_bytes — the implicit departure
     schedule) and every FailureSpec survive exactly, including
     full-precision float timestamps."""
+    from repro.sim.workload import chaos_trace, glitch_storm_trace
     for trace in (_trace(seed=seed, failure_rate=failure_rate),
                   pod_churn_trace(40, n_chips=64, chips_per_rack=32,
-                                  failure_rate=failure_rate, seed=seed)):
+                                  failure_rate=failure_rate, seed=seed),
+                  # fabric-fault kinds: link/TRX/degrade + MTTR repairs,
+                  # and transient OCS glitch windows
+                  chaos_trace(20, n_chips=64, link_fail_rate=failure_rate,
+                              trx_fail_rate=failure_rate,
+                              degrade_rate=failure_rate, seed=seed),
+                  glitch_storm_trace(10, glitch_prob=0.5, seed=seed)):
         back = Trace.from_jsonl(trace.to_jsonl())
         assert back == trace  # frozen-dataclass equality: all fields
         # double round-trip is byte-stable (canonical serialization)
@@ -167,7 +174,14 @@ def test_trace_roundtrip_preserves_failures_and_departures(tmp_path):
                       coll_bytes=12345.678),
               JobSpec("b", 1e-9, 64, steps=1)),
         failures=(FailureSpec(2.5000000001, (5,)),
-                  FailureSpec(7.0, (0, 1, 63))))
+                  FailureSpec(7.0, (0, 1, 63)),
+                  FailureSpec(8.0, (), kind="link_fail", link=(0, 3),
+                              count=2),
+                  FailureSpec(8.5, (7,), kind="degrade", derate=2.25),
+                  FailureSpec(9.0, (), kind="ocs_glitch", duration=1.5,
+                              prob=0.75),
+                  FailureSpec(10.0, (), kind="repair", link=(0, 3),
+                              target="link_fail")))
     path = tmp_path / "t.jsonl"
     trace.save(path)
     back = Trace.load(path)
@@ -175,6 +189,18 @@ def test_trace_roundtrip_preserves_failures_and_departures(tmp_path):
     assert back.jobs[0].arrival == 0.1 + 0.2  # bit-exact float
     assert back.failures[1].chips == (0, 1, 63)
     assert isinstance(back.failures[0].chips, tuple)
+    assert back.failures[2].link == (0, 3) and back.failures[2].count == 2
+    assert back.failures[3].derate == 2.25
+    assert back.failures[5].target == "link_fail"
+
+
+def test_chip_failure_serialization_bytes_unchanged():
+    """Classic chip failures must serialize exactly as before the fabric
+    fault extension — committed pre-chaos trace files stay readable AND
+    byte-identical on re-save."""
+    trace = Trace((), (FailureSpec(2.5, (5, 6)),))
+    line = trace.to_jsonl().splitlines()[0]
+    assert line == '{"type": "failure", "time": 2.5, "chips": [5, 6]}'
 
 
 def test_fig2a_trace_shapes():
